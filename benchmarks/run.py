@@ -1,0 +1,261 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scales are laptop-sized
+(this container is 1 CPU core); every benchmark also reports the derived
+quantity the paper's figure plots (speedup, scaling exponent, fraction),
+and the complexity-model extrapolation to the paper's own dataset sizes.
+
+  Table II  -> naive (cppEDM Alg.1) vs improved (mpEDM Alg.2) causal map
+  Fig 3     -> strong scaling over fake-device worker counts (subprocess)
+  Fig 6     -> runtime vs number of series N
+  Fig 7     -> runtime vs series length L
+  Fig 8     -> CCM phase breakdown: kNN tables vs lookup
+  Fig 9     -> multi-E table construction: cumulative-E scan vs per-E
+               rebuild (the TPU analogue of the paper's GPU-vs-CPU kernel)
+  roofline  -> summary of the dry-run table (benchmarks/results/dryrun)
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    EDMConfig,
+    all_futures,
+    ccm_block,
+    ccm_matrix,
+    ccm_pair_naive,
+    knn_table_single_E,
+    knn_tables_all_E,
+    lag_matrix,
+    simplex_batch,
+)
+from repro.data.synthetic import dummy_brain  # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def _time(fn, *args, reps=3) -> float:
+    """median wall time (s) with block_until_ready."""
+    fn(*args)  # warmup/compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+# ---------------------------------------------------------------- Table II
+def table2_speedup():
+    """Improved Alg.2 vs naive Alg.1 full causal map."""
+    N, L = 24, 400
+    cfg = EDMConfig(E_max=8)
+    ts = jnp.asarray(dummy_brain(N, L))
+    _, optE = simplex_batch(ts, cfg)
+    ts_fut = all_futures(ts, cfg)
+
+    t_improved = _time(lambda: jax.block_until_ready(ccm_matrix(ts, optE, cfg)))
+    # naive cost = N^2 single-pair cross maps (measure one, multiply)
+    E_med = int(np.median(np.asarray(optE)))
+    t_pair = _time(lambda: ccm_pair_naive(ts[0], ts_fut[1], E_med, cfg), reps=5)
+    t_naive = t_pair * N * N
+    row("table2_improved_ccm", t_improved, f"N={N};L={L}")
+    row("table2_naive_ccm_extrap", t_naive, f"pair={t_pair*1e6:.0f}us x N^2")
+    row("table2_speedup", t_improved, f"speedup={t_naive / t_improved:.1f}x")
+    # complexity-model speedup at the paper's Fish1_Normo scale
+    for name, (Np, Lp_) in {"fish1": (53053, 1450), "subject11": (101729, 8528)}.items():
+        E = 20
+        naive = Np * Np * Lp_ * Lp_ * E
+        improved = Np * Lp_ * Lp_ * E + Np * Np * Lp_ * E  # cumulative-E: E not E^2
+        row(f"table2_model_{name}", 0.0, f"algorithmic_speedup={naive / improved:.0f}x")
+
+
+# ------------------------------------------------------------------- Fig 3
+def fig3_strong_scaling():
+    """Pipeline wall time vs fake-device worker count (subprocess per point)."""
+    N, L = 32, 300
+    code = """
+import time, numpy as np
+import jax
+from repro.core.pipeline import run_causal_inference
+from repro.core.types import EDMConfig
+from repro.data.synthetic import dummy_brain
+ts = dummy_brain({N}, {L})
+cfg = EDMConfig(E_max=5, lib_block=2)
+run_causal_inference(ts[:4], cfg)  # warm compile caches
+t0 = time.perf_counter()
+run_causal_inference(ts, cfg)
+print("TIME", time.perf_counter() - t0)
+""".format(N=N, L=L)
+    # NOTE: fake devices time-share ONE physical core, so wall time cannot
+    # drop; what this measures is the SPMD partitioning OVERHEAD of the
+    # worker decomposition (paper Fig 3's linearity comes from the same
+    # zero-communication structure, whose overhead we bound here).
+    base = None
+    for w in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={w}"
+        env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, env=env, timeout=900)
+        t = float([l for l in r.stdout.splitlines() if l.startswith("TIME")][0].split()[1])
+        base = base or t
+        row(f"fig3_workers_{w}", t, f"spmd_overhead={100 * (t - base) / base:.0f}%")
+
+
+# ------------------------------------------------------------------- Fig 6/7
+def fig6_scaling_N():
+    L, cfg = 300, EDMConfig(E_max=5)
+    times = {}
+    for N in (8, 16, 32):
+        ts = jnp.asarray(dummy_brain(N, L, seed=N))
+        _, optE = simplex_batch(ts, cfg)
+        times[N] = _time(lambda ts=ts, optE=optE: ccm_matrix(ts, optE, cfg))
+        row(f"fig6_N{N}", times[N], f"L={L}")
+    expo = np.polyfit(np.log(list(times)), np.log(list(times.values())), 1)[0]
+    row("fig6_scaling_exponent", 0.0, f"O(N^{expo:.2f})_model_<=2")
+
+
+def fig7_scaling_L():
+    N, cfg = 12, EDMConfig(E_max=5)
+    times = {}
+    for L in (200, 400, 800):
+        ts = jnp.asarray(dummy_brain(N, L, seed=L))
+        _, optE = simplex_batch(ts, cfg)
+        times[L] = _time(lambda ts=ts, optE=optE: ccm_matrix(ts, optE, cfg))
+        row(f"fig7_L{L}", times[L], f"N={N}")
+    expo = np.polyfit(np.log(list(times)), np.log(list(times.values())), 1)[0]
+    row("fig7_scaling_exponent", 0.0, f"O(L^{expo:.2f})_model_<=2")
+
+
+# ------------------------------------------------------------------- Fig 8
+def fig8_breakdown():
+    """CCM phase split: kNN table construction vs lookup (paper Fig 8)."""
+    N, L = 32, 500
+    cfg = EDMConfig(E_max=8)
+    ts = jnp.asarray(dummy_brain(N, L))
+    _, optE = simplex_batch(ts, cfg)
+    ts_fut = all_futures(ts, cfg)
+    Lp = cfg.n_points(L)
+    V = lag_matrix(ts[0], cfg.E_max, cfg.tau, Lp)
+
+    t_knn = _time(
+        lambda: knn_tables_all_E(V, V, cfg.k_max, exclude_self=True)
+    )
+    from repro.core.knn import tables_with_weights, simplex_forecast
+
+    idx, sqd = knn_tables_all_E(V, V, cfg.k_max, exclude_self=True)
+    idx, w = tables_with_weights(idx, sqd)
+
+    def lookup_all():
+        e = optE - 1
+        return jax.vmap(lambda yf, ee: simplex_forecast(idx[ee], w[ee], yf))(
+            ts_fut, e
+        )
+
+    t_lookup = _time(jax.jit(lookup_all))
+    total = t_knn + t_lookup
+    row("fig8_knn_per_series", t_knn, f"{100 * t_knn / total:.0f}%_of_ccm")
+    row("fig8_lookup_per_series", t_lookup, f"{100 * t_lookup / total:.0f}%_of_ccm;N={N}")
+
+
+# ------------------------------------------------------------------- Fig 9
+def fig9_multiE_kernel():
+    """Cumulative-E scan vs per-E rebuild — the beyond-paper algorithmic
+    win on the paper's own hot spot (analogue of its GPU-kernel speedup)."""
+    L, E_max = 800, 20
+    cfg = EDMConfig(E_max=E_max)
+    x = jnp.asarray(dummy_brain(1, L)[0])
+    Lp = cfg.n_points(L)
+    V = lag_matrix(x, E_max, cfg.tau, Lp)
+
+    t_cum = _time(
+        jax.jit(lambda V: knn_tables_all_E(V, V, E_max + 1, False)), V
+    )
+
+    @jax.jit
+    def per_E_rebuild(V):
+        return [
+            knn_table_single_E(V, V, E, E_max + 1, False, matmul_form=True)
+            for E in range(1, E_max + 1)
+        ]
+
+    t_reb = _time(per_E_rebuild, V)
+    row("fig9_cumulative_multiE", t_cum, f"L={L};E_max={E_max}")
+    row("fig9_per_E_rebuild", t_reb, f"speedup={t_reb / t_cum:.1f}x")
+
+
+def fig9b_knn_impl_variants():
+    """Measured wall time of the kNN table-construction variants (SSPerf
+    HC3): paper-faithful per-E rebuild vs cumulative-E scan/unroll/blocked.
+    Primary evidence for the HC3 variant ordering (XLA cost_analysis cannot
+    attribute scan bodies, so these are real timings)."""
+    from repro.core.knn import knn_tables_all_E
+
+    L, cfg = 2000, EDMConfig(E_max=20)
+    x = jnp.asarray(dummy_brain(1, L)[0])
+    V = lag_matrix(x, cfg.E_max, cfg.tau, cfg.n_points(L))
+    times = {}
+    for impl in ("rebuild", "scan", "unroll", "blocked:4", "blocked:2"):
+        f = jax.jit(
+            lambda V, impl=impl: knn_tables_all_E(V, V, cfg.k_max, True, impl=impl)
+        )
+        times[impl] = _time(lambda: f(V))
+    base = times["rebuild"]
+    for impl, t in times.items():
+        row(
+            f"fig9b_knn_{impl.replace(':', '')}", t,
+            f"vs_paper_faithful_rebuild={base / t:.2f}x",
+        )
+
+
+# ------------------------------------------------------------------ roofline
+def roofline_summary():
+    d = RESULTS / "dryrun"
+    if not d.exists():
+        return
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if "skipped" in r:
+            row(f"roofline_{r['arch']}_{r['cell']}_{r.get('mesh')}", 0.0, "SKIP")
+            continue
+        rl = r["roofline"]
+        row(
+            f"roofline_{r['arch']}_{r['cell']}_{r['mesh']}",
+            rl["t_compute_s"] + 0.0,
+            f"bottleneck={rl['bottleneck']};frac={rl['roofline_fraction']:.3f};"
+            f"mem_GiB={r['memory']['peak_bytes_per_device'] / 2**30:.1f}",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table2_speedup()
+    fig6_scaling_N()
+    fig7_scaling_L()
+    fig8_breakdown()
+    fig9_multiE_kernel()
+    fig9b_knn_impl_variants()
+    fig3_strong_scaling()
+    roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

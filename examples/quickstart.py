@@ -1,0 +1,35 @@
+"""Quickstart: CCM causal inference on the classic two-species system.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Generates Sugihara's coupled logistic maps (x drives y), runs the full
+pipeline (simplex projection -> optimal E -> cross mapping), and prints the
+causal verdict.  ~10 s on CPU.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core.pipeline import run_causal_inference
+from repro.core.types import EDMConfig
+from repro.data.synthetic import coupled_logistic
+
+
+def main():
+    x, y = coupled_logistic(1000, beta_xy=0.0, beta_yx=0.1, seed=3)
+    ts = np.stack([x, y])
+    out = run_causal_inference(ts, EDMConfig(E_max=8))
+    print(f"optimal embedding dims: x={out.optE[0]}, y={out.optE[1]}")
+    # rho[i, j]: skill of predicting series j from library i's manifold;
+    # high rho[y, x] means x's influence is recoverable from M_y => x -> y.
+    print(f"rho(x-hat | M_y) = {out.rho[1, 0]:.3f}   (x causes y)")
+    print(f"rho(y-hat | M_x) = {out.rho[0, 1]:.3f}   (y causes x)")
+    verdict = "x -> y" if out.rho[1, 0] > out.rho[0, 1] else "y -> x"
+    print(f"CCM verdict: {verdict}  (ground truth: x -> y)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver — the paper's workflow at laptop scale.
+
+    PYTHONPATH=src python examples/zebrafish_synthetic.py [--neurons 48]
+
+1. Generate a synthetic 'zebrafish brain': a sparse directed network of
+   coupled nonlinear (logistic) neurons with known ground-truth adjacency
+   — the stand-in for the SPIM light-sheet recordings of Table I.
+2. Store it in the zarr-lite dataset format (the HDF5 replacement).
+3. Run the full distributed causal-inference pipeline (simplex projection
+   -> per-neuron optimal embedding -> all-to-all CCM), streaming row
+   blocks to disk with resume support (kill it mid-run and re-invoke:
+   it continues from the last completed block).
+4. Score the inferred causal map against the ground-truth network (AUC),
+   reproducing the paper's scientific claim (Fig. 10 E/F) in miniature.
+"""
+import argparse
+import pathlib
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core.pipeline import run_causal_inference
+from repro.core.types import EDMConfig
+from repro.data import store
+from repro.data.synthetic import logistic_network
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--neurons", type=int, default=48)
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out = args.out or tempfile.mkdtemp(prefix="zebrafish_")
+    print(f"[1/4] generating {args.neurons}-neuron synthetic brain "
+          f"({args.steps} steps @ 2 Hz equivalent)")
+    ts, adj = logistic_network(
+        args.neurons, args.steps, density=0.12, strength=0.3, seed=7
+    )
+    store.save_dataset(pathlib.Path(out) / "recording", ts,
+                       {"species": "synthetic zebrafish", "hz": 2})
+
+    print(f"[2/4] running causal inference pipeline -> {out}")
+    t0 = time.time()
+    result = run_causal_inference(
+        ts, EDMConfig(E_max=8), out_dir=str(pathlib.Path(out) / "causal_map"),
+        progress=True,
+    )
+    dt = time.time() - t0
+    n = args.neurons
+    print(f"[3/4] {n}x{n} causal map in {dt:.1f}s "
+          f"({n * n / dt:.0f} cross-maps/s); mean optimal E = {result.optE.mean():.1f}")
+
+    # score: does rho separate true edges from non-edges?
+    rho = result.rho.T  # rho[dst, src] -> edge src->dst
+    mask = ~np.eye(n, dtype=bool)
+    pos, neg = rho[adj], rho[(~adj) & mask]
+    order = np.concatenate([pos, neg]).argsort().argsort()
+    auc = (order[: len(pos)].mean() + 1 - (len(pos) + 1) / 2) / len(neg)
+    print(f"[4/4] edge-recovery AUC = {auc:.3f} "
+          f"(true-edge mean rho {pos.mean():.3f} vs non-edge {neg.mean():.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Architecture registry: --arch <id> -> ModelConfig, plus input specs.
+
+Every assigned architecture is a selectable config; smoke variants are
+reduced same-family configs for CPU tests.  input_specs() returns
+ShapeDtypeStruct stand-ins (no allocation) for the dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    SHAPE_CELLS,
+    ModelConfig,
+    ShapeCell,
+    TrainConfig,
+    shape_cell,
+)
+
+ARCHS = (
+    "llama-3.2-vision-11b",
+    "zamba2-7b",
+    "whisper-medium",
+    "qwen2-1.5b",
+    "minicpm-2b",
+    "smollm-135m",
+    "qwen2.5-3b",
+    "mamba2-2.7b",
+    "dbrx-132b",
+    "grok-1-314b",
+)
+
+_MODULES = {
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-medium": "whisper_medium",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "minicpm-2b": "minicpm_2b",
+    "smollm-135m": "smollm_135m",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "dbrx-132b": "dbrx_132b",
+    "grok-1-314b": "grok_1_314b",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS
+
+
+# --------------------------------------------------------------------------
+# shape-grid applicability (DESIGN.md SS5)
+# --------------------------------------------------------------------------
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic context state: ssm/hybrid only."""
+    if cell.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "pure full-attention arch: no sub-quadratic path at 512k"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: the full batch; decode: one new token + positions
+    (the KV/state cache is a separate lowering argument, see launch.dryrun).
+    """
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if cell.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "audio":
+            batch["audio"] = sds((B, cfg.n_frontend_tokens, cfg.d_model), act)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((B, cfg.n_frontend_tokens, cfg.d_model), act)
+        return batch
+    return {"token": sds((B, 1), i32), "pos": sds((), i32)}
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs of the decode cache (via eval_shape: no alloc)."""
+    from repro.models import transformer
+
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, cell.global_batch, cell.seq_len)
+    )

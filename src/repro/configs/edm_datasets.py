@@ -1,0 +1,21 @@
+"""EDM dataset configurations — the paper's three zebrafish recordings
+(Table I) plus synthetic scaling stand-ins for the dummy datasets of
+SSIV-B3."""
+import dataclasses
+
+from repro.core.types import EDMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EDMDatasetConfig:
+    name: str
+    n_time_steps: int  # L
+    n_time_series: int  # N (active neurons)
+    edm: EDMConfig = EDMConfig()
+
+
+FISH1_NORMO = EDMDatasetConfig("Fish1_Normo", 1450, 53053)
+SUBJECT6 = EDMDatasetConfig("Subject6", 3780, 92538)
+SUBJECT11 = EDMDatasetConfig("Subject11", 8528, 101729)
+
+DATASETS = {d.name.lower(): d for d in (FISH1_NORMO, SUBJECT6, SUBJECT11)}

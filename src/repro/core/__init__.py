@@ -1,0 +1,42 @@
+"""EDM core: the paper's contribution (simplex projection + improved CCM)."""
+from repro.core.types import CausalMap, EDMConfig
+from repro.core.embedding import delay_embed, future_values, lag_matrix
+from repro.core.knn import (
+    knn_table_single_E,
+    knn_tables_all_E,
+    simplex_forecast,
+    tables_with_weights,
+)
+from repro.core.simplex import simplex_batch, simplex_series
+from repro.core.ccm import (
+    all_futures,
+    ccm_block,
+    ccm_convergence,
+    ccm_library_row,
+    ccm_matrix,
+)
+from repro.core.baseline import ccm_naive, ccm_pair_naive
+from repro.core.stats import pearson, simplex_weights
+
+__all__ = [
+    "CausalMap",
+    "EDMConfig",
+    "delay_embed",
+    "future_values",
+    "lag_matrix",
+    "knn_table_single_E",
+    "knn_tables_all_E",
+    "simplex_forecast",
+    "tables_with_weights",
+    "simplex_batch",
+    "simplex_series",
+    "all_futures",
+    "ccm_block",
+    "ccm_convergence",
+    "ccm_library_row",
+    "ccm_matrix",
+    "ccm_naive",
+    "ccm_pair_naive",
+    "pearson",
+    "simplex_weights",
+]

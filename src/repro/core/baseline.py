@@ -1,0 +1,49 @@
+"""cppEDM-style naive CCM (paper Alg. 1) — the baseline mpEDM improves on.
+
+Per (library i, target j) pair the kNN table is rebuilt from scratch at
+E = optE[j]: O(N^2 L^2 E).  Kept (a) to validate that the improved
+algorithm is output-identical, and (b) as the measured baseline for the
+paper's speedup claim (benchmarks/table2_speedup.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding, knn
+from repro.core.stats import pearson, simplex_weights
+from repro.core.types import EDMConfig
+
+
+@functools.partial(jax.jit, static_argnames=("E", "cfg"))
+def ccm_pair_naive(
+    x: jax.Array, y_fut: jax.Array, E: int, cfg: EDMConfig
+) -> jax.Array:
+    """One cross mapping, full table rebuild (Alg. 1 lines 14-17)."""
+    L = x.shape[0]
+    Lp = cfg.n_points(L)
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    idx, sqd = knn.knn_table_single_E(
+        V, V, E, E + 1, exclude_self=cfg.exclude_self
+    )
+    w = simplex_weights(sqd, E + 1)
+    pred = knn.simplex_forecast(idx, w, y_fut)
+    return pearson(y_fut, pred)
+
+
+def ccm_naive(ts: jax.Array, optE: jax.Array, cfg: EDMConfig) -> jax.Array:
+    """Full (N, N) causal map, redundant per-pair tables (test scale only)."""
+    import numpy as np
+
+    from repro.core.ccm import all_futures
+
+    N = ts.shape[0]
+    ts_fut = all_futures(ts, cfg)
+    optE_np = np.asarray(optE)
+    rho = np.zeros((N, N), np.float32)
+    for i in range(N):
+        for j in range(N):
+            rho[i, j] = ccm_pair_naive(ts[i], ts_fut[j], int(optE_np[j]), cfg)
+    return jnp.asarray(rho)

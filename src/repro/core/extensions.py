@@ -1,0 +1,111 @@
+"""EDM extensions — the paper's stated future work (SSV: "EDM algorithms
+other than simplex projection and CCM will be implemented in mpEDM").
+
+  * S-Map (Sugihara 1994): locally-weighted linear forecasting; the theta
+    sweep separates linear (theta=0) from state-dependent nonlinear
+    dynamics, and rho(theta) rising above rho(0) is the classic
+    nonlinearity test.
+  * Time-delayed CCM (Ye et al. 2015, paper ref [8]): cross-map skill as a
+    function of prediction lag; the argmax lag's SIGN distinguishes true
+    causal direction (negative optimal lag) from synchrony artifacts —
+    "the adjacency in the network is determined by time delay cross
+    mapping" (paper SSII-A).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding, knn
+from repro.core.stats import pearson
+from repro.core.types import EDMConfig
+
+
+@functools.partial(jax.jit, static_argnames=("E", "cfg"))
+def smap_series(x: jax.Array, theta: jax.Array, E: int, cfg: EDMConfig) -> jax.Array:
+    """S-Map forecast skill of one series at locality theta.
+
+    Solves, per target point, the distance-weighted least squares
+    y = [1, coords] @ b with weights exp(-theta * d / d_mean), library =
+    first half, target = second half.  Returns Pearson rho.
+    """
+    L = x.shape[0]
+    Lp = cfg.n_points(L)
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)  # (E_max, Lp)
+    fut = embedding.future_values(x, cfg.E_max, cfg.tau, cfg.Tp, Lp)
+    Lh = Lp // 2
+    lib, tgt = V[:E, :Lh].T, V[:E, Lh:].T  # (Lh, E), (Lt, E)
+    fut_lib, fut_tgt = fut[:Lh], fut[Lh:]
+
+    d = jnp.sqrt(
+        jnp.maximum(
+            jnp.sum(jnp.square(tgt[:, None, :] - lib[None, :, :]), -1), 0.0
+        )
+    )  # (Lt, Lh)
+    dbar = jnp.mean(d, axis=1, keepdims=True)
+    w = jnp.exp(-theta * d / jnp.maximum(dbar, 1e-8))  # (Lt, Lh)
+
+    A = jnp.concatenate([jnp.ones((Lh, 1)), lib], axis=1)  # (Lh, E+1)
+
+    def solve_one(wi):
+        Aw = A * wi[:, None]
+        yw = fut_lib * wi
+        # ridge-regularized normal equations (stable under tiny weights)
+        G = Aw.T @ Aw + 1e-4 * jnp.eye(A.shape[1])
+        b = jnp.linalg.solve(G, Aw.T @ yw)
+        return b
+
+    B = jax.vmap(solve_one)(w)  # (Lt, E+1)
+    Aq = jnp.concatenate([jnp.ones((tgt.shape[0], 1)), tgt], axis=1)
+    pred = jnp.sum(Aq * B, axis=1)
+    return pearson(fut_tgt, pred)
+
+
+def smap_theta_sweep(
+    x: jax.Array, E: int, cfg: EDMConfig,
+    thetas=(0.0, 0.1, 0.3, 0.75, 1.5, 3.0, 6.0),
+) -> jax.Array:
+    """rho(theta).  rho rising above rho(0) => state-dependent
+    (nonlinear) dynamics — the S-Map nonlinearity test."""
+    return jnp.stack([smap_series(x, jnp.float32(t), E, cfg) for t in thetas])
+
+
+@functools.partial(jax.jit, static_argnames=("E", "cfg", "lags"))
+def ccm_lagged(
+    x: jax.Array, y: jax.Array, E: int, cfg: EDMConfig,
+    lags: tuple[int, ...] = (-4, -3, -2, -1, 0, 1, 2, 3, 4),
+) -> jax.Array:
+    """Time-delayed CCM: skill of estimating y(t + lag) from M_x.
+
+    For true y -> x causation the best lag is <= 0 (the cause precedes);
+    a positive optimal lag flags synchrony/anticipatory artifacts.
+    Returns rho per lag.
+    """
+    L = x.shape[0]
+    Lp = cfg.n_points(L)
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    idx, sqd = knn.knn_table_single_E(V, V, E, E + 1, exclude_self=cfg.exclude_self)
+    from repro.core.stats import simplex_weights
+
+    w = simplex_weights(sqd, E + 1)
+    offset = (cfg.E_max - 1) * cfg.tau
+    max_lag = max(abs(l) for l in lags)
+    rhos = []
+    for lag in lags:
+        # y value aligned to each library point's present time + Tp + lag,
+        # clipped into range; edge points masked out of the correlation
+        t = offset + cfg.Tp + lag + jnp.arange(Lp)
+        valid_t = jnp.clip(t, 0, L - 1)
+        y_fut = y[valid_t]
+        pred = knn.simplex_forecast(idx, w, y_fut)
+        m = ((t >= 0) & (t < L)) & (jnp.arange(Lp) < Lp - max_lag)
+        mu_a = jnp.sum(y_fut * m) / jnp.sum(m)
+        mu_b = jnp.sum(pred * m) / jnp.sum(m)
+        a, b = (y_fut - mu_a) * m, (pred - mu_b) * m
+        rho = jnp.sum(a * b) / jnp.maximum(
+            jnp.sqrt(jnp.sum(a * a) * jnp.sum(b * b)), 1e-8
+        )
+        rhos.append(rho)
+    return jnp.stack(rhos)

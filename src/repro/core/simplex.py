@@ -1,0 +1,42 @@
+"""Phase 1 — simplex projection: find the optimal embedding dimension per
+series (paper Alg. 1 lines 1-11).
+
+Library = first half of the series, target = second half; for each
+E in 1..E_max forecast every target point from its E+1 nearest library
+neighbours, score with Pearson rho, and keep the argmax E.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding, knn
+from repro.core.stats import pearson
+from repro.core.types import EDMConfig
+
+
+def simplex_series(x: jax.Array, cfg: EDMConfig) -> tuple[jax.Array, jax.Array]:
+    """Simplex projection of one series.
+
+    Returns (rhos (E_max,), optE scalar int32 in [1, E_max]).
+    """
+    L = x.shape[0]
+    Lp = cfg.n_points(L)
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    fut = embedding.future_values(x, cfg.E_max, cfg.tau, cfg.Tp, Lp)
+    Lh = Lp // 2
+    Vc, Vq = V[:, :Lh], V[:, Lh:]
+    idx, sqd = knn.knn_tables_all_E(Vq, Vc, cfg.k_max, exclude_self=False)
+    idx, w = knn.tables_with_weights(idx, sqd)
+    preds = knn.simplex_forecast(idx, w, fut[:Lh])  # (E_max, Lq)
+    rhos = pearson(jnp.broadcast_to(fut[Lh:], preds.shape), preds)
+    optE = jnp.argmax(rhos).astype(jnp.int32) + 1
+    return rhos, optE
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def simplex_batch(ts: jax.Array, cfg: EDMConfig) -> tuple[jax.Array, jax.Array]:
+    """vmapped phase 1 over a (N, L) dataset -> (rhos (N, E_max), optE (N,))."""
+    return jax.vmap(lambda x: simplex_series(x, cfg))(ts)

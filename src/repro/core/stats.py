@@ -1,0 +1,39 @@
+"""Small numerical helpers shared across the EDM core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def pearson(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pearson correlation along the last axis; 0 when either side is constant
+    (cppEDM reports 0 skill for degenerate predictions)."""
+    a = a - jnp.mean(a, axis=-1, keepdims=True)
+    b = b - jnp.mean(b, axis=-1, keepdims=True)
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.sqrt(jnp.sum(a * a, axis=-1) * jnp.sum(b * b, axis=-1))
+    return jnp.where(den > _EPS, num / jnp.maximum(den, _EPS), 0.0)
+
+
+def simplex_weights(sq_dists: jax.Array, k_valid: jax.Array | int) -> jax.Array:
+    """Exponential simplex weights from *squared* neighbour distances.
+
+    w_j = exp(-d_j / d_1) over the k_valid nearest neighbours, row-normalized
+    (cppEDM convention: scale by the distance to the nearest neighbour).
+
+    sq_dists: (..., k_max) sorted ascending.  k_valid: number of neighbours
+    actually used (E+1); entries beyond it get weight 0 so every embedding
+    dimension can share one padded table shape.
+    """
+    k_max = sq_dists.shape[-1]
+    d = jnp.sqrt(jnp.maximum(sq_dists, 0.0))
+    # Masked entries may be +inf (self-exclusion with tiny candidate sets);
+    # they fall out via exp(-inf) = 0, but keep d1 finite.
+    d1 = jnp.where(jnp.isfinite(d[..., :1]), d[..., :1], 0.0)
+    w = jnp.exp(-d / jnp.maximum(d1, _EPS))
+    w = jnp.where(jnp.isfinite(w), w, 0.0)
+    kmask = jnp.arange(k_max) < k_valid
+    w = w * kmask
+    return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), _EPS)

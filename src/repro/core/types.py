@@ -1,0 +1,70 @@
+"""Shared EDM configuration and result types."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class EDMConfig:
+    """Configuration of one causal-inference run (paper §III).
+
+    Attributes:
+      E_max: maximum embedding dimension swept in simplex projection
+        (paper uses <= 20 in practice).
+      tau: delay-embedding lag.
+      Tp: prediction horizon in time steps (paper: one step ahead).
+      exclude_self: mask the zero-distance self neighbour when library ==
+        target (cppEDM exclusionRadius semantics; see DESIGN.md SS4).
+      lib_block: number of library series processed per device per chunk in
+        the distributed CCM phase (granularity of progress checkpoints).
+      use_kernels: route kNN/lookup through the Pallas kernels (interpret
+        mode on CPU) instead of the pure-jnp reference path.
+    """
+
+    E_max: int = 20
+    tau: int = 1
+    Tp: int = 1
+    exclude_self: bool = True
+    lib_block: int = 8
+    target_block: int = 2048
+    use_kernels: bool = False
+    # kNN table construction variants (SSPerf hillclimb #3):
+    #   rebuild    — per-E matmul-form rebuild (the PAPER-FAITHFUL shape:
+    #                mpEDM recomputes each E's kNN from scratch)
+    #   scan       — cumulative-E lax.scan (beyond-paper; cost_analysis
+    #                cannot see scan bodies, so dry-runs avoid it)
+    #   unroll     — cumulative-E python loop (XLA fuses consecutive updates)
+    #   blocked:g  — scan over blocks of g unrolled steps: the peak-memory /
+    #                HBM-traffic frontier (DEFAULT; falls back to unroll
+    #                when E_max %% g != 0)
+    knn_impl: str = "blocked:4"
+    dist_dtype: str = "float32"  # bfloat16 halves D-slab HBM traffic
+    # k_override: pins the neighbour-table width independent of E_max —
+    # used by the dry-run's reduced-E cost compiles so per-E bodies carry
+    # the PRODUCTION top-k cost (k tracks E_max otherwise).
+    k_override: int = 0
+
+    @property
+    def k_max(self) -> int:
+        # Simplex uses E+1 neighbours for embedding dimension E.
+        return self.k_override or self.E_max + 1
+
+    def n_points(self, L: int) -> int:
+        """Number of embeddable query/candidate points for a length-L series.
+
+        All embedding dimensions share the aligned 'present-time' indexing
+        (offset (E_max-1)*tau) so that tables for every E have one shape and
+        the cumulative-distance recurrence applies (DESIGN.md SS2).
+        """
+        return L - (self.E_max - 1) * self.tau - self.Tp
+
+
+@dataclasses.dataclass
+class CausalMap:
+    """Output of the pipeline: rho[i, j] = skill of cross-mapping target j
+    from library i's reconstructed manifold (j "CCM-causes" i when high)."""
+
+    rho: "jax.Array | numpy.ndarray"  # (N, N) float32
+    optE: "jax.Array | numpy.ndarray"  # (N,) int32
+    simplex_rho: Optional["jax.Array | numpy.ndarray"] = None  # (N, E_max)

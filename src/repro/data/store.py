@@ -1,0 +1,71 @@
+"""'zarr-lite' memmap store — the HDF5 replacement (h5py unavailable offline).
+
+Layout: <name>/meta.json + <name>/data.npy (memmap-able).  Mirrors the
+paper's I/O design points: parallel read of the input dataset, and causal-
+map output written as large sequential ROW-BLOCK shards (never the
+small-random-write pattern that bottlenecked GPFS, SSIII-C)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+
+def save_dataset(path: str | pathlib.Path, ts: np.ndarray, meta: dict | None = None):
+    p = pathlib.Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    np.save(p / "data.npy", ts)
+    (p / "meta.json").write_text(
+        json.dumps({"shape": list(ts.shape), "dtype": str(ts.dtype), **(meta or {})})
+    )
+
+
+def load_dataset(path: str | pathlib.Path, mmap: bool = True) -> np.ndarray:
+    p = pathlib.Path(path)
+    return np.load(p / "data.npy", mmap_mode="r" if mmap else None)
+
+
+class RowBlockWriter:
+    """Streamed causal-map output: one .npy per completed row block + a
+    {row0: nrows} manifest — the resume unit of the EDM pipeline.  Coverage
+    is tracked per ROW, so a restart with a different worker count (elastic:
+    different chunk size) resumes exactly where any prior mesh left off."""
+
+    def __init__(self, path: str | pathlib.Path, N: int):
+        self.dir = pathlib.Path(path)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.N = N
+        self.manifest = self.dir / "blocks.json"
+        self.done: dict[str, int] = (
+            json.loads(self.manifest.read_text()) if self.manifest.exists() else {}
+        )
+
+    def covered(self) -> np.ndarray:
+        cov = np.zeros(self.N, bool)
+        for row0_s, n in self.done.items():
+            row0 = int(row0_s)
+            cov[row0 : row0 + n] = True
+        return cov
+
+    def next_uncovered(self, start: int = 0) -> int | None:
+        cov = self.covered()
+        idx = np.nonzero(~cov[start:])[0]
+        return int(idx[0]) + start if idx.size else None
+
+    def write_block(self, row0: int, rho_rows: np.ndarray):
+        rho_rows = rho_rows[: max(0, self.N - row0)]
+        np.save(self.dir / f"rows_{row0:08d}.npy", rho_rows)
+        self.done[str(row0)] = int(rho_rows.shape[0])
+        tmp = self.manifest.with_suffix(".tmp")
+        tmp.write_text(json.dumps(self.done))
+        tmp.rename(self.manifest)
+
+    def assemble(self) -> np.ndarray:
+        """Gather all blocks into the (N, N) causal map (small N only)."""
+        rho = np.zeros((self.N, self.N), np.float32)
+        for row0_s in self.done:
+            row0 = int(row0_s)
+            rows = np.load(self.dir / f"rows_{row0:08d}.npy")
+            rho[row0 : row0 + rows.shape[0]] = rows[:, : self.N]
+        return rho

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: batched CCM lookup (paper Alg. 5).
+
+The paper identifies lookup as the next bottleneck at large N (SSIV-B3,
+Fig. 8a): it is a random-gather, memory-bandwidth-bound kernel.  TPU
+adaptation (DESIGN.md SS2): batch *many target series* that share one
+library table (same optimal E) through a single pass, so each (Lq, k)
+index block is loaded once from HBM and reused across block_b targets —
+raising arithmetic intensity by block_b versus the paper's one-target-at-
+a-time CPU kernel.
+
+Grid: (target blocks, time blocks).  Per program VMEM:
+  Y block (block_b, Lp) + idx/w blocks (block_t, k) + out (block_b, block_t)
+  ~ 1.1 MB for block_b=32, Lp=8528.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def ccm_lookup_kernel(idx_ref, w_ref, y_ref, out_ref):
+    idxb = idx_ref[...]  # (BT, k)
+    wb = w_ref[...]  # (BT, k)
+    y = y_ref[...]  # (BB, Lp)
+    BT, k = idxb.shape
+    g = jnp.take(y, idxb.reshape(-1), axis=1)  # (BB, BT*k) vector gather
+    g = g.reshape(y.shape[0], BT, k)
+    out_ref[...] = jnp.einsum(
+        "tk,btk->bt", wb, g, preferred_element_type=jnp.float32
+    )
+
+
+def ccm_lookup_pallas(
+    idx: jax.Array,
+    w: jax.Array,
+    Y_fut: jax.Array,
+    block_b: int = 32,
+    block_t: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    Lq, k = idx.shape
+    B, Lp = Y_fut.shape
+    Lq_pad = pl.cdiv(Lq, block_t) * block_t
+    B_pad = pl.cdiv(B, block_b) * block_b
+    idx_p = jnp.pad(idx, ((0, Lq_pad - Lq), (0, 0)))
+    w_p = jnp.pad(w, ((0, Lq_pad - Lq), (0, 0)))
+    Y_p = jnp.pad(Y_fut, ((0, B_pad - B), (0, 0)))
+
+    out = pl.pallas_call(
+        ccm_lookup_kernel,
+        grid=(B_pad // block_b, Lq_pad // block_t),
+        in_specs=[
+            pl.BlockSpec((block_t, k), lambda b, t: (t, 0)),
+            pl.BlockSpec((block_t, k), lambda b, t: (t, 0)),
+            pl.BlockSpec((block_b, Lp), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), lambda b, t: (b, t)),
+        out_shape=jax.ShapeDtypeStruct((B_pad, Lq_pad), jnp.float32),
+        interpret=interpret,
+    )(idx_p, w_p, Y_p)
+    return out[:B, :Lq]

@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the ccm_lookup kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ccm_lookup.ccm_lookup import ccm_lookup_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_t", "interpret")
+)
+def ccm_lookup(
+    idx: jax.Array,
+    w: jax.Array,
+    Y_fut: jax.Array,
+    block_b: int = 32,
+    block_t: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched simplex lookup: pred[b, t] = sum_k w[t,k] * Y_fut[b, idx[t,k]].
+
+    idx/w: (Lq, k) one library table; Y_fut: (B, Lp) targets sharing it.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return ccm_lookup_pallas(
+        idx, w, Y_fut, block_b=block_b, block_t=block_t, interpret=interpret
+    )

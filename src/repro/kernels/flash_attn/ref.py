@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash_attn Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attn_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """q: (B, Sq, H, dh); k/v: (B, Sk, K, dh), H % K == 0 -> (B, Sq, H, dh).
+
+    f32 softmax over f32 logits — the same numerics contract the kernel
+    implements with online (streaming) softmax.
+    """
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    rep = H // K
+    qf = q.astype(jnp.float32) / jnp.sqrt(dh)
+    logits = jnp.einsum(
+        "bqkrd,bskd->bkrqs", qf.reshape(B, Sq, K, rep, dh), k.astype(jnp.float32)
+    )
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""jit'd public wrapper for the knn_topk kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.knn_topk.knn_topk import knn_topk_pallas
+
+
+def _default_interpret() -> bool:
+    # Pallas TPU kernels run natively on TPU; everywhere else (this CPU
+    # container) they are validated in interpret mode.
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "exclude_self", "block_q", "interpret")
+)
+def knn_topk(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool = False,
+    block_q: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-E kNN tables.
+
+    Vq: (E_max, Lq) query lag matrix, Vc: (E_max, Lc) candidates.
+    Returns (idx, sq_dists) each (E_max, Lq, k): for every embedding
+    dimension E=e+1, the k nearest candidates under the dimension-E
+    delay-embedding distance.
+    """
+    if exclude_self and Vq.shape != Vc.shape:
+        raise ValueError("exclude_self requires query set == candidate set")
+    if interpret is None:
+        interpret = _default_interpret()
+    return knn_topk_pallas(
+        Vq, Vc, k, exclude_self, block_q=block_q, interpret=interpret
+    )

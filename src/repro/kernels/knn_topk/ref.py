@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the knn_topk Pallas kernel.
+
+Semantics: for every embedding dimension E in 1..E_max, the k nearest
+candidate points of every query point under the cumulative delay-embedding
+squared distance.  Accumulation is termwise-sequential over lags — the same
+fp order the kernel uses — so oracle and kernel agree to tie-breaking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_topk_ref(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Vq: (E_max, Lq), Vc: (E_max, Lc) -> idx, sqd each (E_max, Lq, k)."""
+    E_max, Lq = Vq.shape
+    Lc = Vc.shape[1]
+    self_mask = (
+        jnp.eye(Lq, Lc, dtype=bool)
+        if exclude_self
+        else jnp.zeros((Lq, Lc), bool)
+    )
+
+    def step(D, vs):
+        vq, vc = vs
+        D = D + jnp.square(vq[:, None] - vc[None, :])
+        Dm = jnp.where(self_mask, jnp.inf, D)
+        neg_d, idx = jax.lax.top_k(-Dm, k)
+        return D, (idx.astype(jnp.int32), -neg_d)
+
+    _, (indices, sq_dists) = jax.lax.scan(
+        step, jnp.zeros((Lq, Lc), jnp.float32), (Vq, Vc)
+    )
+    return indices, sq_dists

@@ -1,0 +1,109 @@
+"""EDM pipeline dry-run: lower + compile the CCM chunk step for the
+production mesh at the paper's dataset scales (Table I), ShapeDtypeStruct
+only.
+
+Cost extrapolation (cost_analysis counts loop bodies once):
+the chunk function has two sequential loops — the scan over embedding
+dimensions E (knn_tables_all_E) and the lax.map over target blocks
+(ccm_library_row).  Cost is affine:  c(E, t) = b + E*e + t*l.
+Three compiles at (E,t) = (1,1), (2,1), (2,2) identify e, l, b; the full
+cell is b + E_max*e + n_tb*l.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.edm_datasets import DATASETS
+from repro.core.pipeline import make_ccm_chunk_fn
+from repro.core.types import EDMConfig
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+
+
+def _lower_chunk(mesh, cfg: EDMConfig, chunk: int, N: int, L: int):
+    Lp = cfg.n_points(L)
+    fn = make_ccm_chunk_fn(mesh, cfg)
+    args = (
+        jax.ShapeDtypeStruct((chunk, L), jnp.float32),
+        jax.ShapeDtypeStruct((N, Lp), jnp.float32),
+        jax.ShapeDtypeStruct((N,), jnp.int32),
+    )
+    with mesh:
+        return fn.lower(*args)
+
+
+def _cost(compiled) -> dict:
+    rl = RL.from_compiled(compiled)
+    return {
+        "flops": rl.flops_per_chip,
+        "bytes": rl.bytes_per_chip,
+        **{f"coll:{k}": v for k, v in rl.coll_by_kind.items()},
+    }
+
+
+def lower_edm_cell(dataset: str, multi_pod: bool = False, cfg: EDMConfig | None = None):
+    ds = DATASETS[dataset]
+    cfg = cfg or ds.edm
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chunk = mesh.size * cfg.lib_block
+    N, L = ds.n_time_series, ds.n_time_steps
+
+    t0 = time.time()
+    lowered = _lower_chunk(mesh, cfg, chunk, N, L)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    # Cost extrapolation: with target_block = N the lookup lax.map has trip
+    # count 1, so cost_analysis counts it EXACTLY; only the scan over E
+    # (counted once) needs scaling.  The scan unit is 1 E for scan/unroll
+    # impls and g Es for blocked:g — compile at E_max = unit and 2*unit:
+    # total = c(unit) + (E_max/unit - 1) * (c(2*unit) - c(unit)).
+    unit = 1
+    if cfg.knn_impl.startswith("blocked"):
+        unit = int(cfg.knn_impl.split(":")[1]) if ":" in cfg.knn_impl else 4
+    k_pin = cfg.k_max  # production table width, pinned across reduced-E compiles
+    c1 = _cost(_lower_chunk(mesh, dataclasses.replace(cfg, E_max=unit, target_block=N, k_override=k_pin), chunk, N, L).compile())
+    c2 = _cost(_lower_chunk(mesh, dataclasses.replace(cfg, E_max=2 * unit, target_block=N, k_override=k_pin), chunk, N, L).compile())
+    e_body = {k: c2[k] - c1[k] for k in c1}
+    cost = {k: c1[k] + (cfg.E_max // unit - 1) * e_body[k] for k in c1}
+    coll = {k.split(":", 1)[1]: v for k, v in cost.items() if k.startswith("coll:")}
+    rl = RL.Roofline(
+        flops_per_chip=cost["flops"],
+        bytes_per_chip=cost["bytes"],
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_by_kind=coll,
+    )
+
+    n_chunks = -(-N // chunk)
+    # whole-run roofline terms = per-chunk terms x number of chunks
+    return {
+        "arch": f"edm-{dataset}",
+        "cell": f"ccm_N{N}_L{L}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": mesh.size,
+        "chunk_rows": chunk,
+        "n_chunks": n_chunks,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "peak_bytes_per_device": int(
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            ),
+        },
+        "roofline": rl.to_dict(),
+        "roofline_whole_run": {
+            "t_compute_s": rl.t_compute * n_chunks,
+            "t_memory_s": rl.t_memory * n_chunks,
+            "t_collective_s": rl.t_collective * n_chunks,
+        },
+    }

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model) — the pod axis is an
+outer data-parallel axis by default (the EDM pipeline flattens all axes into
+one worker grid, matching the paper's 512 nodes).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(n: int | None = None, model: int = 1):
+    """Small mesh over the local (possibly fake) CPU devices, for tests."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"
+
+
+def flat_axes(mesh) -> tuple[str, ...]:
+    """All axes — the EDM pipeline's flat worker grid."""
+    return tuple(mesh.axis_names)

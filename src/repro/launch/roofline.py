@@ -1,0 +1,160 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+memory term     = HLO_bytes / (chips * HBM_bw)
+collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis() (XLA reports the
+per-device partitioned module; we normalize to per-chip).  Collective bytes
+are not in cost_analysis: we parse the compiled HLO text and sum, per
+collective op, max(operand bytes, result bytes).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# e.g.:  %ag = bf16[8,128]{1,0} all-gather(%x), ...
+# NB: result types may be TUPLES with /*index=N*/ comments (variadic
+# all-reduce of many gradient tensors), so the result group must not
+# exclude '=' characters.
+_LINE_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(k + r"(?:-start|-done)?" for k in _COLL_KINDS) + r")\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind byte totals from compiled HLO text (per device)."""
+    out: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        result_part, kind = m.groups()
+        kind = kind.replace("-start", "").replace("-done", "")
+        if kind.endswith("-done"):
+            continue
+        # operands: everything inside the call parens
+        call = line[m.end() :]
+        result_bytes = _shape_bytes(result_part)
+        operand_bytes = _shape_bytes(call.split(")", 1)[0]) if ")" in call else 0
+        out[kind] += max(result_bytes, operand_bytes)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the run bounded by the compute roofline: t_comp/t_max."""
+        t = max(self.t_memory, self.t_collective, self.t_compute, 1e-30)
+        return self.t_compute / t
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_ = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(
+        flops_per_chip=flops,
+        bytes_per_chip=bytes_,
+        coll_bytes_per_chip=float(sum(coll.values())),
+        coll_by_kind=coll,
+    )
+
+
+# --------------------------------------------------------------------------
+# model FLOPs (the "useful compute" yardstick): 6 * N * D
+# --------------------------------------------------------------------------
+def model_flops(cfg, n_tokens: int, n_params: int, active_params: int | None = None) -> float:
+    n = active_params if active_params is not None else n_params
+    return 6.0 * n * n_tokens
+
+
+def active_params(cfg, params_tree_shapes) -> int:
+    """MoE: expert weights count at k/E; everything else fully."""
+    import jax
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree_shapes)[0]:
+        names = [p.key for p in path if hasattr(p, "key")]
+        n = int(np.prod(leaf.shape))
+        if "moe" in names and names[-1] in ("w_up", "w_down", "w_gate"):
+            n = int(n * cfg.experts_per_tok / cfg.n_experts)
+        total += n
+    return total

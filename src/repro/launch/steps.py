@@ -1,0 +1,124 @@
+"""Step functions: train_step / prefill_step / decode step builders.
+
+These are the units the launcher jits and the dry-run lowers: one function
+per (arch x shape-kind), closed over ModelConfig/TrainConfig, taking only
+arrays (state, batch, cache) so in_shardings map 1:1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.optim import adafactor, adamw
+from repro.optim.schedule import make_schedule
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    @staticmethod
+    def create(cfg: ModelConfig, tc: TrainConfig, key) -> "TrainState":
+        params = T.init_params(cfg, key)
+        if tc.optimizer == "adamw":
+            opt = adamw.init(params, moment_dtype=jnp.dtype(tc.moment_dtype))
+        else:
+            opt = adafactor.init(params)
+        return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+
+def _opt_mod(tc: TrainConfig):
+    return {"adamw": adamw, "adafactor": adafactor}[tc.optimizer]
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    sched = make_schedule(tc.schedule, tc.lr, tc.warmup_steps, tc.total_steps)
+    opt = _opt_mod(tc)
+
+    def loss_of(params, batch):
+        return T.loss_fn(params, batch, cfg, tc)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if tc.microbatch > 0:
+            grads, (loss, metrics) = _accumulated_grads(loss_of, state.params, batch, tc.microbatch)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                state.params, batch
+            )
+        grads, gnorm = adamw.clip_by_global_norm(grads, tc.grad_clip)
+        lr = sched(state.step)
+        if tc.optimizer == "adamw":
+            new_params, new_opt = adamw.update(
+                grads, state.opt, state.params, lr, weight_decay=tc.weight_decay
+            )
+        else:
+            new_params, new_opt = adafactor.update(
+                grads, state.opt, state.params, lr, weight_decay=tc.weight_decay
+            )
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def _accumulated_grads(loss_of, params, batch, microbatch: int):
+    """Gradient accumulation: scan over micro-batches (batch axis 0 split)."""
+    B = jax.tree.leaves(batch)[0].shape[0]
+    assert B % microbatch == 0
+    n_micro = B // microbatch
+    mb = jax.tree.map(
+        lambda x: x.reshape((n_micro, microbatch) + x.shape[1:]), batch
+    )
+
+    def body(carry, micro):
+        g_acc, l_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, micro)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+        return (g_acc, l_acc + loss), metrics
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g_sum, l_sum), metrics = jax.lax.scan(body, (g0, 0.0), mb)
+    grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return grads, (l_sum / n_micro, metrics)
+
+
+def make_prefill_step(cfg: ModelConfig, policy=None):
+    """policy: optional ShardingPolicy — constrains the internally-created
+    cache (decode layout: seq sharded on the model axis) so GSPMD does not
+    have to guess its placement from the write pattern."""
+
+    def prefill_step(params, batch):
+        B, S = batch["tokens"].shape
+        cache = T.init_cache(cfg, B, S)
+        if policy is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.sharding.policy import cache_specs_tree
+
+            specs = cache_specs_tree(policy, cache, cfg)
+            cache = jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(policy.mesh, s)
+                ),
+                cache, specs,
+            )
+        return T.prefill(params, batch, cache, cfg, remat=False)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, cache):
+        return T.decode_step(params, batch, cache, cfg)
+
+    return decode_step

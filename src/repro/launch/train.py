@@ -1,0 +1,111 @@
+"""Training launcher: --arch <id> on any mesh, with sharded state, data
+prefetch, async checkpointing, and the resilient step loop.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 300 --batch 8 --seq 512 --smoke --ckpt-dir /tmp/ckpt
+
+On a real pod this launches under the production mesh; in this container
+it runs on the local CPU devices (optionally faked via XLA_FLAGS)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, get_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import Prefetcher, TokenStream
+from repro.launch.mesh import make_cpu_mesh, make_production_mesh
+from repro.launch.steps import TrainState, make_train_step
+from repro.runtime.fault import ResilientLoop
+from repro.sharding import policy as POL
+
+
+def build(cfg, tc, mesh, batch, seq):
+    policy = POL.auto_policy(cfg, mesh)
+    key = jax.random.PRNGKey(tc.seed)
+    state_sds = jax.eval_shape(lambda: TrainState.create(cfg, tc, key))
+    p_specs = POL.param_specs(policy, state_sds.params)
+    from repro.launch.dryrun import _opt_specs  # shared spec logic
+
+    state_specs = TrainState(
+        params=p_specs,
+        opt=_opt_specs(policy, p_specs, state_sds.params, tc),
+        step=jax.sharding.PartitionSpec(),
+    )
+    named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    with mesh:
+        state = jax.jit(
+            lambda k: TrainState.create(cfg, tc, k),
+            out_shardings=named(state_specs),
+        )(key)
+    step_fn = jax.jit(
+        make_train_step(cfg, tc), donate_argnums=(0,),
+        in_shardings=(named(state_specs), None),
+    )
+    return state, step_fn, named(state_specs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tc = TrainConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(1, args.steps // 20))
+    mesh = (
+        make_production_mesh() if args.production_mesh else make_cpu_mesh()
+    )
+    state, step_fn, state_shardings = build(cfg, tc, mesh, args.batch, args.seq)
+
+    extra = {}
+    if cfg.family == "audio":
+        extra["audio"] = ((args.batch, cfg.n_frontend_tokens, cfg.d_model), np.float32)
+    if cfg.family == "vlm":
+        extra["image_embeds"] = ((args.batch, cfg.n_frontend_tokens, cfg.d_model), np.float32)
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=tc.seed, extra_specs=extra)
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)
+
+    # resume if a checkpoint exists (elastic: any mesh)
+    start = 0
+    restored = ckpt.restore_latest(state, state_shardings)
+    if restored[0] is not None:
+        start, state = restored
+        print(f"resumed from step {start}")
+
+    def logging_step(state, batch):
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        step = int(state.step)
+        if step % args.log_every == 0 or step == 1:
+            print(
+                f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} dt={time.time()-t0:.3f}s"
+            )
+        return state, metrics
+
+    loop = ResilientLoop(logging_step, ckpt, save_every=args.save_every)
+    with mesh:
+        state, step, metrics = loop.run(
+            state, stream.batch_at, n_steps=args.steps, start_step=start,
+            shardings=state_shardings,
+        )
+    print(f"done at step {step}; final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

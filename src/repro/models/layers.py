@@ -1,0 +1,304 @@
+"""Primitive layers: norms, rotary embeddings, linear, attention, MLP.
+
+Functional style: ``init_*`` builds a param pytree (nested dicts of
+jnp arrays); ``*_fwd`` applies it.  Stacked-layer params (leading layer
+axis) are built by vmapping init over per-layer keys; application scans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+_INIT_STD = 0.02
+
+
+# --------------------------------------------------------------------------
+# basics
+# --------------------------------------------------------------------------
+def _normal(key, shape, dtype, std=_INIT_STD):
+    return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False) -> Params:
+    p = {"w": _normal(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(kind: str, d, dtype) -> Params:
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    return rms_norm(p, x) if kind == "rmsnorm" else layer_norm(p, x)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, d_head); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, optional cross-attention, optional KV cache)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    rope_theta: float = 1.0e4
+    use_rope: bool = True
+    causal: bool = True
+    kv_d_model: Optional[int] = None  # cross-attn source width
+    impl: str = "xla"  # xla (dense S^2) | chunked (flash-in-XLA)
+    chunk: int = 1024
+    unroll: bool = False  # unrolled chunk loop (exact causal slicing)
+    seq_shard: bool = False  # sequence-parallel attention (sharding/ctx)
+
+
+def init_attention(key, a: AttnDims, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    kv_d = a.kv_d_model or a.d_model
+    return {
+        "wq": init_linear(ks[0], a.d_model, a.n_heads * a.d_head, dtype, a.qkv_bias),
+        "wk": init_linear(ks[1], kv_d, a.n_kv_heads * a.d_head, dtype, a.qkv_bias),
+        "wv": init_linear(ks[2], kv_d, a.n_kv_heads * a.d_head, dtype, a.qkv_bias),
+        "wo": init_linear(ks[3], a.n_heads * a.d_head, a.d_model, dtype, False),
+    }
+
+
+def _sdpa_dense(q, k, v, causal: bool, q_pos=None):
+    """Materialized-S^2 attention (the BASELINE path; see _sdpa_chunked for
+    the optimized one).  q: (B,Sq,H,dh), k/v: (B,Sk,K,dh), H % K == 0.
+
+    q_pos: absolute key-index positions of the queries (decode/prefill with a
+    cache longer than Sq); the causal mask then also hides unwritten cache
+    slots (their key index exceeds every query position).
+    """
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    rep = H // K
+    qf = q.astype(jnp.float32) / jnp.sqrt(dh)
+    # (B, K, rep, Sq, Sk)
+    logits = jnp.einsum(
+        "bqkrd,bskd->bkrqs",
+        qf.reshape(B, Sq, K, rep, dh),
+        k.astype(jnp.float32),
+    )
+    Sk = k.shape[1]
+    if causal:
+        if q_pos is None:
+            q_pos = jnp.arange(Sq)
+        mask = q_pos[:, None] >= jnp.arange(Sk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, q_pos=None, chunk: int = 1024,
+                  unroll: bool = False, seq_shard: bool = False):
+    """Query-chunked attention ("flash-in-XLA", SSPerf hillclimb #1): the
+    (Sq, Sk) score matrix is never materialized — one (chunk, Sk) slab per
+    step.  In `unroll` mode (python loop; also what the dry-run cost
+    extrapolation lowers) causal chunks additionally SLICE the key range to
+    the causal frontier, halving attention FLOPs exactly.
+
+    Numerics match _sdpa_dense: same f32 softmax over the same logits.
+    """
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    rep = H // K
+    C = min(chunk, Sq)
+    if Sq % C != 0:  # fall back: irregular sizes (decode handles Sq==1)
+        return _sdpa_dense(q, k, v, causal, q_pos)
+    nq = Sq // C
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    qf = (q.astype(jnp.float32) / jnp.sqrt(dh)).reshape(B, nq, C, K, rep, dh)
+    qpos_c = q_pos.reshape(nq, C)
+    Sk = k.shape[1]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_chunk(qc, pos_c, k_sl, v_sl):
+        if seq_shard:
+            # sequence parallelism WITHIN the chunk: each q-chunk spreads
+            # over the model axis (constraining the full tensor instead
+            # makes chunk slices land on single shards -> involuntary
+            # remat in the partitioner)
+            from repro.sharding.ctx import constrain_seq_parallel
+
+            qc = constrain_seq_parallel(qc, seq_axis=1)
+        logits = jnp.einsum("bqkrd,bskd->bkrqs", qc, k_sl)
+        if causal:
+            mask = pos_c[:, None] >= jnp.arange(k_sl.shape[1])[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bkrqs,bskd->bqkrd", p, v_sl)
+
+    # checkpoint each chunk: the backward pass recomputes the chunk's
+    # logits instead of storing them — otherwise the chunk map stores a
+    # full S^2-worth of residuals across chunks, defeating the point in
+    # training (SSPerf: train-cell peaks).
+    one_chunk_ckpt = jax.checkpoint(one_chunk)
+    if unroll:
+        outs = []
+        for i in range(nq):
+            hi = Sk
+            if causal and Sk == Sq:  # exact causal frontier slice
+                hi = (i + 1) * C
+            outs.append(
+                one_chunk_ckpt(qf[:, i], qpos_c[i], kf[:, :hi], vf[:, :hi])
+            )
+        o = jnp.stack(outs, axis=1)
+    else:
+        o = jax.lax.map(
+            lambda ins: one_chunk_ckpt(ins[0], ins[1], kf, vf),
+            (qf.transpose(1, 0, 2, 3, 4, 5), qpos_c),
+        ).transpose(1, 0, 2, 3, 4, 5)
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _sdpa(q, k, v, causal: bool, q_pos=None, impl: str = "xla",
+          chunk: int = 1024, unroll: bool = False, seq_shard: bool = False):
+    if seq_shard and impl != "chunked" and q.shape[1] > 1:
+        from repro.sharding.ctx import constrain_seq_parallel
+
+        q = constrain_seq_parallel(q, seq_axis=1)
+    if impl == "chunked" and q.shape[1] > 1:
+        return _sdpa_chunked(q, k, v, causal, q_pos, chunk=chunk,
+                             unroll=unroll, seq_shard=seq_shard)
+    return _sdpa_dense(q, k, v, causal, q_pos)
+
+
+def attention_fwd(
+    p: Params,
+    a: AttnDims,
+    x: jax.Array,
+    kv_src: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,
+) -> tuple[jax.Array, Optional[Params]]:
+    """Self- or cross-attention.
+
+    cache: {'k': (B, S_max, K, dh), 'v': ...} — decode path updates in place
+    at cache_pos (scalar) and attends over the filled prefix.
+    """
+    B, Sq, _ = x.shape
+    src = x if kv_src is None else kv_src
+    q = linear(p["wq"], x).reshape(B, Sq, a.n_heads, a.d_head)
+    k = linear(p["wk"], src).reshape(B, src.shape[1], a.n_kv_heads, a.d_head)
+    v = linear(p["wv"], src).reshape(B, src.shape[1], a.n_kv_heads, a.d_head)
+
+
+    if a.use_rope and kv_src is None:
+        if positions is None:
+            positions = jnp.arange(Sq) if cache_pos is None else cache_pos + jnp.arange(Sq)
+        q = rope(q, positions, a.rope_theta)
+        k = rope(k, positions, a.rope_theta)
+
+    new_cache = None
+    if cache is not None and cache_pos is not None and kv_src is None:
+        # decode/prefill: write new kv at cache_pos, attend causally over the
+        # written prefix (unwritten slots are masked by q_pos semantics)
+        k_upd = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        v_upd = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        new_cache = {"k": k_upd, "v": v_upd}
+        if Sq == cache["k"].shape[1]:
+            # full-cache prefill: attend over the FRESH k/v — equivalent
+            # math, but keeps attention off the seq-sharded cache layout
+            # (avoids GSPMD ring-permuting the whole cache; SSPerf)
+            o = _sdpa(q, k, v, causal=True, impl=a.impl, chunk=a.chunk,
+                      unroll=a.unroll, seq_shard=a.seq_shard)
+        else:
+            o = _sdpa(q, k_upd, v_upd, causal=True,
+                      q_pos=cache_pos + jnp.arange(Sq),
+                      impl=a.impl, chunk=a.chunk, unroll=a.unroll,
+                      seq_shard=a.seq_shard)
+    elif cache is not None:  # cross-attn with precomputed source kv
+        o = _sdpa(q, cache["k"], cache["v"], causal=False,
+                  impl=a.impl, chunk=a.chunk, unroll=a.unroll,
+                  seq_shard=a.seq_shard)
+        new_cache = cache
+    else:
+        o = _sdpa(q, k, v, causal=a.causal and kv_src is None,
+                  impl=a.impl, chunk=a.chunk, unroll=a.unroll,
+                  seq_shard=a.seq_shard)
+    y = linear(p["wo"], o.reshape(B, Sq, a.n_heads * a.d_head))
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": init_linear(ks[0], d_model, d_ff, dtype),
+            "w_up": init_linear(ks[1], d_model, d_ff, dtype),
+            "w_down": init_linear(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": init_linear(ks[0], d_model, d_ff, dtype, bias=True),
+        "w_down": init_linear(ks[1], d_ff, d_model, dtype, bias=True),
+    }
+
+
+def mlp_fwd(p: Params, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        return linear(
+            p["w_down"], jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x)
+        )
+    return linear(p["w_down"], jax.nn.gelu(linear(p["w_up"], x)))

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts block: top-k router + GShard-style capacity dispatch.
+
+Dispatch/combine are one-hot einsums over (group, token, expert, capacity) —
+the TPU-native formulation (dense MXU work, no scatter).  Tokens are split
+into fixed-size groups so capacity is local and the dispatch tensor stays
+bounded; overflow tokens are dropped (standard GShard semantics,
+capacity_factor controls the drop rate).  An auxiliary load-balancing loss
+(Switch Transformer eq. 4) is returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _normal
+
+
+def init_moe(key, d_model, d_ff, n_experts, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _normal(ks[0], (d_model, n_experts), jnp.float32),
+        "w_up": _normal(ks[1], (n_experts, d_model, d_ff), dtype),
+        "w_down": _normal(ks[2], (n_experts, d_ff, d_model), dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = _normal(ks[3], (n_experts, d_model, d_ff), dtype)
+    return p
+
+
+def moe_fwd(
+    p: Params,
+    x: jax.Array,
+    n_experts: int,
+    top_k: int,
+    act: str,
+    capacity_factor: float = 1.25,
+    group_size: int = 1024,
+    no_drop: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    no_drop=True sets capacity = group size (nothing ever dropped) — used on
+    the single-token decode path where the dispatch tensor is tiny and drop
+    noise would corrupt generation.
+    """
+    B, S, d = x.shape
+    T0 = B * S
+    g = min(group_size, T0)
+    T = -(-T0 // g) * g  # pad tokens to a group multiple
+    xt = x.reshape(T0, d)
+    if T != T0:
+        xt = jnp.pad(xt, ((0, T - T0), (0, 0)))
+    G = T // g
+    xt = xt.reshape(G, g, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+
+    # top-k gates, renormalized over the selected experts.
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    C = g if no_drop else max(1, int(capacity_factor * g * top_k / n_experts))
+    # Position of each (token, slot) within its expert's capacity buffer:
+    # count prior assignments to the same expert, slot-major then token-major
+    # (GShard ordering: earlier tokens and earlier slots win capacity).
+    onehot = jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.float32)  # (G,g,k,E)
+    if T != T0:  # padded tokens never dispatch nor consume capacity
+        valid = (jnp.arange(T) < T0).astype(jnp.float32).reshape(G, g)
+        onehot = onehot * valid[:, :, None, None]
+    slot_major = onehot.transpose(0, 2, 1, 3).reshape(G, top_k * g, n_experts)
+    pos_sm = jnp.cumsum(slot_major, axis=1) - slot_major  # prior count
+    pos = (
+        pos_sm.reshape(G, top_k, g, n_experts).transpose(0, 2, 1, 3)
+    )  # (G, g, k, E)
+    within = pos < C
+    keep = within * onehot  # (G,g,k,E) 1 where token-slot kept
+
+    pos_idx = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (G,g,k)
+    cap_oh = jax.nn.one_hot(jnp.minimum(pos_idx, C - 1), C, dtype=jnp.float32)
+    # dispatch[g,s,e,c] = 1 iff token s goes to expert e at capacity slot c
+    dispatch = jnp.einsum("gske,gskc->gsec", keep, cap_oh)
+    combine = jnp.einsum(
+        "gske,gskc,gsk->gsec", keep, cap_oh, gate_vals.astype(jnp.float32)
+    )
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xt)
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * jnp.einsum(
+            "gecd,edf->gecf", xe, p["w_up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_up"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    # Switch load-balancing loss: E * sum_e fraction_e * router_prob_e.
+    frac = jnp.mean(keep.sum(2), axis=1)  # (G, E) fraction of tokens kept
+    prob = jnp.mean(probs, axis=1)  # (G, E)
+    aux = n_experts * jnp.mean(jnp.sum(frac * prob, axis=-1))
+    return y.reshape(T, d)[:T0].reshape(B, S, d), aux

@@ -1,0 +1,209 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060), plus the O(1)-state decode step.
+
+Train path: sequence split into chunks of length Q; intra-chunk term is a
+decay-masked quadratic form (MXU matmuls), inter-chunk term is a scan over
+per-chunk states — the TPU-native formulation (no sequential per-step scan).
+Decode path: single recurrent state update per token; the "KV cache" is the
+(B, H, P, N) state + a (B, d_conv-1, conv_dim) conv window, independent of
+context length — which is why mamba2/zamba2 run the long_500k shape while
+pure attention archs skip it (DESIGN.md SS5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, _normal, init_linear, linear, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+    n_groups: int = 1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_mamba(key, s: SSMDims, dtype) -> Params:
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * s.d_inner + 2 * s.n_groups * s.d_state + s.n_heads
+    return {
+        "in_proj": init_linear(ks[0], s.d_model, d_in_proj, dtype),
+        "conv_w": _normal(ks[1], (s.d_conv, s.conv_dim), dtype, std=0.1),
+        "conv_b": jnp.zeros((s.conv_dim,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, s.n_heads, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((s.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((s.n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((s.d_inner,), dtype),
+        "out_proj": init_linear(ks[4], s.d_inner, s.d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, window d_conv (<= 4: unrolled shifts)."""
+    d_conv = w.shape[0]
+    y = x * w[-1]
+    for i in range(1, d_conv):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted * w[d_conv - 1 - i]
+    return y + b
+
+
+def _split_in_proj(zxbcdt: jax.Array, s: SSMDims):
+    di, ds, ng = s.d_inner, s.d_state, s.n_groups
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ng * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ng * ds :]
+    return z, xBC, dt
+
+
+def mamba_fwd(
+    p: Params, s: SSMDims, u: jax.Array, return_state: bool = False
+):
+    """Chunked SSD training/prefill forward.  u: (B, S, d_model).
+
+    return_state=True additionally returns the decode-ready recurrent state
+    (final SSM state + raw conv window tail) for cache handoff at prefill.
+    """
+    B, S0, _ = u.shape
+    Q = min(s.chunk, S0)
+    H, P, N = s.n_heads, s.head_dim, s.d_state
+
+    z, xBC, dt = _split_in_proj(linear(p["in_proj"], u), s)
+    xBC_raw_tail = xBC[:, S0 - (s.d_conv - 1) :, :]
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+
+    # pad to a chunk multiple; padded steps get dt=0 (identity state update)
+    S = ((S0 + Q - 1) // Q) * Q
+    pad = S - S0
+    if pad:
+        xBC = jnp.pad(xBC, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = S // Q
+
+    x = xBC[..., : s.d_inner].reshape(B, S, H, P)
+    Bm = xBC[..., s.d_inner : s.d_inner + N]  # n_groups=1: shared over heads
+    Cm = xBC[..., s.d_inner + N :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    if pad:
+        step_mask = (jnp.arange(S) < S0).astype(jnp.float32)
+        dt = dt * step_mask[None, :, None]
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+
+    # chunk views
+    xc = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    ac = dtc * A  # (B,nc,Q,H) log-decay increments
+    csum = jnp.cumsum(ac, axis=2)  # inclusive
+
+    # ---- intra-chunk: decay-masked quadratic attention-like term ----
+    # decay[b,c,h,t,j] = exp(csum_t - csum_j) for j <= t else 0.
+    # Mask BEFORE exp: for t < j the exponent is positive and can overflow;
+    # masking after exp would zero the forward but leave 0*inf = NaN in the
+    # backward pass.
+    rel = csum[:, :, :, None, :] - csum[:, :, None, :, :]  # (B,nc,Q,Q,H): t,j
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    rel = jnp.where(tri[None, None, :, :, None], rel, -1e30)
+    decay = jnp.exp(rel)
+    scores = jnp.einsum("bcqn,bcjn->bcqj", Cc, Bc)
+    y_intra = jnp.einsum(
+        "bcqj,bcqjh,bcjh,bcjhp->bcqhp", scores, decay, dtc, xc
+    )
+
+    # ---- inter-chunk: scan over per-chunk states ----
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)  # (B,nc,Q,H)
+    chunk_state = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn", dtc * decay_to_end, Bc, xc
+    )
+    chunk_decay = jnp.exp(csum[:, :, -1, :])  # (B,nc,H)
+
+    def step(S_prev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        S_out = dec[:, :, None, None] * S_prev + st
+        return S_out, S_prev  # emit the INCOMING state for this chunk
+
+    S_init = jnp.zeros((B, H, P, N), jnp.float32)
+    S_last, S_in = jax.lax.scan(
+        step,
+        S_init,
+        (
+            chunk_state.transpose(1, 0, 2, 3, 4),
+            chunk_decay.transpose(1, 0, 2),
+        ),
+    )
+    S_in = S_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc, S_in) * jnp.exp(csum)[
+        ..., None
+    ]
+
+    y = (y_intra + y_inter).reshape(B, S, H, P) + p["D"][:, None] * x.reshape(
+        B, S, H, P
+    ).astype(jnp.float32)
+    y = y.reshape(B, S, s.d_inner)[:, :S0].astype(u.dtype)
+
+    # gated RMSNorm then output projection
+    y = rms_norm({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    if return_state:
+        return out, {"conv": xBC_raw_tail, "ssm": S_last}
+    return out
+
+
+def mamba_init_state(s: SSMDims, B: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((B, s.d_conv - 1, s.conv_dim), dtype),
+        "ssm": jnp.zeros((B, s.n_heads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(
+    p: Params, s: SSMDims, u: jax.Array, state: Params
+) -> tuple[jax.Array, Params]:
+    """One-token decode.  u: (B, 1, d_model) -> (y (B,1,d), new state)."""
+    B = u.shape[0]
+    H, P, N = s.n_heads, s.head_dim, s.d_state
+    z, xBC, dt = _split_in_proj(linear(p["in_proj"], u), s)
+    window = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32)) + p[
+        "conv_b"
+    ].astype(jnp.float32)
+    xBC_t = jax.nn.silu(conv_out)[:, None].astype(u.dtype)  # (B,1,conv_dim)
+    new_conv = window[:, 1:]
+
+    x = xBC_t[..., : s.d_inner].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC_t[:, 0, s.d_inner : s.d_inner + N].astype(jnp.float32)
+    Cm = xBC_t[:, 0, s.d_inner + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # (B,H)
+
+    S_new = a[:, :, None, None] * state["ssm"] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, x, Bm
+    )
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cm) + p["D"][:, None] * x
+    y = y.reshape(B, 1, s.d_inner).astype(u.dtype)
+    y = rms_norm({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return linear(p["out_proj"], y), {"conv": new_conv, "ssm": S_new}

@@ -1,0 +1,866 @@
+"""Model assembly for all assigned architecture families.
+
+Families and their layer layouts (scan-over-layers with stacked params):
+
+  dense / moe   : uniform decoder blocks                       -> one scan
+  ssm (mamba2)  : uniform Mamba2 blocks                        -> one scan
+  hybrid(zamba2): repeating unit from cfg.hybrid_pattern, e.g. ("m","m","a");
+                  "a" is ONE shared attention block (params reused every unit)
+                  with per-unit LoRA adapters, reading concat(h, h0)
+  audio(whisper): encoder scan (bidirectional self) + decoder scan
+                  (causal self + cross-attn); frontend is a stub — batches
+                  carry precomputed frame embeddings
+  vlm (llama-v) : decoder units of cross_attn_period layers where the last-1
+                  position is a gated cross-attention block over image
+                  patch embeddings (stub frontend)
+
+Each family provides: init, train loss, prefill (logits + cache), and
+single-token decode (logits + updated cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stacked_init(fn, key, n: int) -> Params:
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _attn_dims(cfg: ModelConfig, cross: bool = False, d_in: int | None = None) -> L.AttnDims:
+    return L.AttnDims(
+        d_model=d_in or cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+        use_rope=(cfg.pos == "rope") and not cross,
+        causal=not cross,
+        kv_d_model=cfg.d_model if cross else None,
+        impl=cfg.attn_impl,
+        chunk=cfg.attn_chunk,
+        unroll=not cfg.scan_layers,
+        seq_shard=cfg.attn_seq_shard,
+    )
+
+
+def _ssm_dims(cfg: ModelConfig) -> SSM.SSMDims:
+    return SSM.SSMDims(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv,
+        expand=cfg.ssm_expand,
+        head_dim=cfg.ssm_head_dim,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def _init_dense_block(key, cfg: ModelConfig, causal=True) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "attn": L.init_attention(ks[0], _attn_dims(cfg), dt),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if cfg.n_experts > 0:
+        p["moe"] = MOE.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.mlp_act, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dt)
+    return p
+
+
+def _dense_block_fwd(
+    p: Params,
+    cfg: ModelConfig,
+    x,
+    positions=None,
+    cache=None,
+    cache_pos=None,
+):
+    h, new_cache = L.attention_fwd(
+        p["attn"], _attn_dims(cfg), L.apply_norm(cfg.norm, p["ln1"], x),
+        positions=positions, cache=cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    hn = L.apply_norm(cfg.norm, p["ln2"], x)
+    if cfg.n_experts > 0:
+        h, aux = MOE.moe_fwd(
+            p["moe"], hn, cfg.n_experts, cfg.experts_per_tok, cfg.mlp_act,
+            cfg.capacity_factor, cfg.moe_group_size,
+            no_drop=(x.shape[1] == 1),  # single-token decode: never drop
+        )
+    else:
+        h, aux = L.mlp_fwd(p["mlp"], hn, cfg.mlp_act), 0.0
+    return x + h, aux, new_cache
+
+
+def _init_cross_block(key, cfg: ModelConfig, gated: bool) -> Params:
+    """VLM gated cross-attn block / whisper-decoder cross sub-block."""
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    p = {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "xattn": L.init_attention(ks[0], _attn_dims(cfg, cross=True), dt),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dt),
+    }
+    if gated:
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def _cross_block_fwd(p: Params, cfg: ModelConfig, x, src_kv: Params):
+    """src_kv: precomputed {'k','v'} from image/encoder embeddings."""
+    h, _ = L.attention_fwd(
+        p["xattn"], _attn_dims(cfg, cross=True),
+        L.apply_norm(cfg.norm, p["ln1"], x), cache=src_kv,
+    )
+    if "gate_attn" in p:
+        h = jnp.tanh(p["gate_attn"]).astype(h.dtype) * h
+    x = x + h
+    h = L.mlp_fwd(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], x), cfg.mlp_act)
+    if "gate_mlp" in p:
+        h = jnp.tanh(p["gate_mlp"]).astype(h.dtype) * h
+    return x + h
+
+
+def _cross_kv(p_attn: Params, cfg: ModelConfig, src: jax.Array) -> Params:
+    """Precompute cross-attention K/V once per sequence (prefill/decode)."""
+    B, Ssrc, _ = src.shape
+    a = _attn_dims(cfg, cross=True)
+    k = L.linear(p_attn["wk"], src).reshape(B, Ssrc, a.n_kv_heads, a.d_head)
+    v = L.linear(p_attn["wv"], src).reshape(B, Ssrc, a.n_kv_heads, a.d_head)
+    return {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# embeddings / head
+# --------------------------------------------------------------------------
+def _init_embed(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    p = {"tok": L._normal(ks[0], (cfg.padded_vocab, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._normal(ks[1], (cfg.d_model, cfg.padded_vocab), dt)
+    p["ln_f"] = L.init_norm(cfg.norm, cfg.d_model, dt)
+    if cfg.pos == "learned":
+        p["pos"] = L._normal(ks[2], (65536, cfg.d_model), dt)
+    return p
+
+
+def _embed(p: Params, cfg: ModelConfig, tokens, pos_offset=0):
+    x = p["tok"][tokens]
+    if cfg.pos == "learned":
+        S = tokens.shape[1]
+        x = x + jax.lax.dynamic_slice_in_dim(p["pos"], pos_offset, S, axis=0)
+    return x
+
+
+def _head(p: Params, cfg: ModelConfig, x):
+    x = L.apply_norm(cfg.norm, p["ln_f"], x)
+    w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    return (x @ w).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# scan machinery
+# --------------------------------------------------------------------------
+def _scan(body, x, xs, remat: bool, scan: bool = True):
+    f = jax.checkpoint(body) if remat else body
+    if scan:
+        return jax.lax.scan(f, x, xs)
+    # unrolled python loop with scan-identical semantics (stacked outputs);
+    # used by the dry-run cost extrapolation (cost_analysis counts scan
+    # bodies once) and available as a compile-time/perf knob.
+    n = jax.tree.leaves(xs)[0].shape[0] if xs is not None else 0
+    outs = []
+    for i in range(n):
+        x, out = f(x, jax.tree.map(lambda a: a[i], xs))
+        outs.append(out)
+    if outs and jax.tree.leaves(outs[0]):
+        outs = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        outs = jnp.zeros((n,))
+    return x, outs
+
+
+def _init_mamba_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = _dtype(cfg)
+    return {
+        "ln": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "mixer": SSM.init_mamba(ks[0], _ssm_dims(cfg), dt),
+    }
+
+
+
+def _prefill_head(params, cfg: ModelConfig, x):
+    """Serving prefill: optionally emit only the final position's logits."""
+    if cfg.prefill_last_only:
+        x = x[:, -1:]
+    return _head(params["embed"], cfg, x)
+
+# ==========================================================================
+# dense / moe decoder-only family
+# ==========================================================================
+def _init_dense_family(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": _init_embed(k1, cfg),
+        "blocks": _stacked_init(
+            lambda k: _init_dense_block(k, cfg), k2, cfg.n_layers
+        ),
+    }
+
+
+def _fwd_dense(params, cfg: ModelConfig, tokens, remat=True):
+    x = _embed(params["embed"], cfg, tokens)
+
+    def body(h, lp):
+        h2, aux, _ = _dense_block_fwd(lp, cfg, h)
+        return h2, aux
+
+    x, auxs = _scan(body, x, params["blocks"], remat, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), jnp.sum(auxs)
+
+
+def _dense_cache(cfg: ModelConfig, B, cache_len, dtype):
+    kshape = (cfg.n_layers, B, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kshape, dtype), "v": jnp.zeros(kshape, dtype)}
+
+
+def _prefill_dense(params, cfg: ModelConfig, tokens, cache, remat=True):
+    x = _embed(params["embed"], cfg, tokens)
+
+    def body(h, inp):
+        lp, cl = inp
+        h2, aux, ncl = _dense_block_fwd(lp, cfg, h, cache=cl, cache_pos=0)
+        return h2, (aux, ncl)
+
+    x, (auxs, ncache) = _scan(body, x, (params["blocks"], cache), remat, cfg.scan_layers)
+    return _prefill_head(params, cfg, x), ncache
+
+
+def _decode_dense(params, cfg: ModelConfig, token, cache, pos):
+    x = _embed(params["embed"], cfg, token, pos_offset=pos)
+
+    def body(h, inp):
+        lp, cl = inp
+        h2, _, ncl = _dense_block_fwd(lp, cfg, h, cache=cl, cache_pos=pos)
+        return h2, ncl
+
+    x, ncache = _scan(body, x, (params["blocks"], cache), False, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), ncache
+
+
+# ==========================================================================
+# ssm (mamba2) family
+# ==========================================================================
+def _init_ssm_family(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": _init_embed(k1, cfg),
+        "blocks": _stacked_init(
+            lambda k: _init_mamba_block(k, cfg), k2, cfg.n_layers
+        ),
+    }
+
+
+def _fwd_ssm(params, cfg: ModelConfig, tokens, remat=True):
+    x = _embed(params["embed"], cfg, tokens)
+    dims = _ssm_dims(cfg)
+
+    def body(h, lp):
+        h2 = h + SSM.mamba_fwd(lp["mixer"], dims, L.apply_norm(cfg.norm, lp["ln"], h))
+        return h2, 0.0
+
+    x, _ = _scan(body, x, params["blocks"], remat, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), jnp.asarray(0.0)
+
+
+def _ssm_cache(cfg: ModelConfig, B, cache_len, dtype):
+    del cache_len  # O(1) state — the whole point of the ssm family
+    dims = _ssm_dims(cfg)
+    st = SSM.mamba_init_state(dims, B, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), st
+    )
+
+
+def _prefill_ssm(params, cfg: ModelConfig, tokens, cache, remat=True):
+    x = _embed(params["embed"], cfg, tokens)
+    dims = _ssm_dims(cfg)
+
+    def body(h, inp):
+        lp, _cl = inp
+        y, st = SSM.mamba_fwd(
+            lp["mixer"], dims, L.apply_norm(cfg.norm, lp["ln"], h), return_state=True
+        )
+        return h + y, st
+
+    x, ncache = _scan(body, x, (params["blocks"], cache), remat, cfg.scan_layers)
+    ncache = {"conv": ncache["conv"].astype(cache["conv"].dtype), "ssm": ncache["ssm"]}
+    return _prefill_head(params, cfg, x), ncache
+
+
+def _decode_ssm(params, cfg: ModelConfig, token, cache, pos):
+    x = _embed(params["embed"], cfg, token, pos_offset=pos)
+    dims = _ssm_dims(cfg)
+
+    def body(h, inp):
+        lp, cl = inp
+        y, st = SSM.mamba_decode_step(
+            lp["mixer"], dims, L.apply_norm(cfg.norm, lp["ln"], h), cl
+        )
+        return h + y, st
+
+    x, ncache = _scan(body, x, (params["blocks"], cache), False, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), ncache
+
+
+# ==========================================================================
+# hybrid (zamba2) family: units of cfg.hybrid_pattern, "a" = shared block
+# ==========================================================================
+def _hybrid_counts(cfg: ModelConfig):
+    unit = len(cfg.hybrid_pattern)
+    assert cfg.n_layers % unit == 0, "n_layers must tile hybrid_pattern"
+    n_units = cfg.n_layers // unit
+    m_per_unit = sum(1 for s in cfg.hybrid_pattern if s == "m")
+    return n_units, m_per_unit
+
+
+def _init_shared_block(key, cfg: ModelConfig) -> Params:
+    """Shared attention+MLP block reading concat(h, h0) (2*d_model wide)."""
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    d2 = 2 * cfg.d_model
+    hd = cfg.head_dim
+    return {
+        "ln1": L.init_norm(cfg.norm, d2, dt),
+        "wq": L.init_linear(ks[0], d2, cfg.n_heads * hd, dt),
+        "wk": L.init_linear(ks[1], d2, cfg.n_kv_heads * hd, dt),
+        "wv": L.init_linear(ks[2], d2, cfg.n_kv_heads * hd, dt),
+        "wo": L.init_linear(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+        "ln2": L.init_norm(cfg.norm, d2, dt),
+        "w_up": L.init_linear(ks[4], d2, cfg.d_ff, dt),
+        "w_down": L.init_linear(ks[5], cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def _init_lora(key, cfg: ModelConfig) -> Params:
+    """Per-unit LoRA adapters on the shared block's q/k/v (arXiv:2411.15242)."""
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    d2, hd, r = 2 * cfg.d_model, cfg.head_dim, cfg.lora_rank
+    out = {}
+    for i, (nm, dout) in enumerate(
+        [("q", cfg.n_heads * hd), ("k", cfg.n_kv_heads * hd), ("v", cfg.n_kv_heads * hd)]
+    ):
+        out[f"a_{nm}"] = L._normal(ks[2 * i], (d2, r), dt)
+        out[f"b_{nm}"] = jnp.zeros((r, dout), dt)
+    return out
+
+
+def _shared_block_fwd(sp, lora, cfg: ModelConfig, x, x0, cache=None, cache_pos=None):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    xin = jnp.concatenate([x, x0], axis=-1)
+    h = L.apply_norm(cfg.norm, sp["ln1"], xin)
+
+    def proj(nm, wnm, nh):
+        w = sp[wnm]["w"]
+        y = h @ w + (h @ lora[f"a_{nm}"]) @ lora[f"b_{nm}"]
+        return y.reshape(B, S, nh, hd)
+
+    q = proj("q", "wq", cfg.n_heads)
+    k = proj("k", "wk", cfg.n_kv_heads)
+    v = proj("v", "wv", cfg.n_kv_heads)
+    positions = (
+        jnp.arange(S) if cache_pos is None else cache_pos + jnp.arange(S)
+    )
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        new_cache = {"k": k, "v": v}
+        o = L._sdpa(q, k, v, causal=True, q_pos=positions,
+                    impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                    unroll=not cfg.scan_layers)
+    else:
+        o = L._sdpa(q, k, v, causal=True, impl=cfg.attn_impl,
+                    chunk=cfg.attn_chunk, unroll=not cfg.scan_layers)
+    x = x + L.linear(sp["wo"], o.reshape(B, S, cfg.n_heads * hd))
+
+    xin2 = jnp.concatenate([x, x0], axis=-1)
+    h2 = L.apply_norm(cfg.norm, sp["ln2"], xin2)
+    x = x + L.linear(sp["w_down"], jax.nn.gelu(L.linear(sp["w_up"], h2)))
+    return x, new_cache
+
+
+def _init_hybrid_family(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_units, m_per_unit = _hybrid_counts(cfg)
+
+    def unit_mambas(k):
+        return _stacked_init(lambda kk: _init_mamba_block(kk, cfg), k, m_per_unit)
+
+    return {
+        "embed": _init_embed(k1, cfg),
+        "mamba": _stacked_init(unit_mambas, k2, n_units),
+        "shared": _init_shared_block(k3, cfg),
+        "lora": _stacked_init(lambda k: _init_lora(k, cfg), k4, n_units),
+    }
+
+
+def _hybrid_unit_body(cfg: ModelConfig, shared, x, x0, mamba_u, lora_u,
+                      ssm_states=None, attn_cache=None, pos=None, decode=False):
+    dims = _ssm_dims(cfg)
+    n_units, m_per_unit = _hybrid_counts(cfg)
+    new_states = []
+    mi = 0
+    new_attn_cache = None
+    for sym in cfg.hybrid_pattern:
+        if sym == "m":
+            lp = jax.tree.map(lambda a: a[mi], mamba_u)
+            hn = L.apply_norm(cfg.norm, lp["ln"], x)
+            if decode:
+                st = jax.tree.map(lambda a: a[mi], ssm_states)
+                y, nst = SSM.mamba_decode_step(lp["mixer"], dims, hn, st)
+                new_states.append(nst)
+            elif ssm_states is not None:  # prefill
+                y, nst = SSM.mamba_fwd(lp["mixer"], dims, hn, return_state=True)
+                new_states.append(nst)
+            else:
+                y = SSM.mamba_fwd(lp["mixer"], dims, hn)
+            x = x + y
+            mi += 1
+        else:  # shared attention block
+            x, new_attn_cache = _shared_block_fwd(
+                shared, lora_u, cfg, x, x0, cache=attn_cache, cache_pos=pos
+            )
+    if new_states:
+        new_states = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+    else:
+        new_states = None
+    return x, new_states, new_attn_cache
+
+
+def _fwd_hybrid(params, cfg: ModelConfig, tokens, remat=True):
+    x = _embed(params["embed"], cfg, tokens)
+    x0 = x
+
+    def body(h, inp):
+        mamba_u, lora_u = inp
+        h2, _, _ = _hybrid_unit_body(cfg, params["shared"], h, x0, mamba_u, lora_u)
+        return h2, 0.0
+
+    x, _ = _scan(body, x, (params["mamba"], params["lora"]), remat, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), jnp.asarray(0.0)
+
+
+def _hybrid_cache(cfg: ModelConfig, B, cache_len, dtype):
+    n_units, m_per_unit = _hybrid_counts(cfg)
+    dims = _ssm_dims(cfg)
+    st = SSM.mamba_init_state(dims, B, dtype)
+    kshape = (n_units, B, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_units, m_per_unit) + a.shape), st
+        ),
+        "attn": {"k": jnp.zeros(kshape, dtype), "v": jnp.zeros(kshape, dtype)},
+        "x0": jnp.zeros((B, 1, cfg.d_model), dtype),  # decode x0 convention
+    }
+
+
+def _prefill_hybrid(params, cfg: ModelConfig, tokens, cache, remat=True):
+    x = _embed(params["embed"], cfg, tokens)
+    x0 = x
+
+    def body(h, inp):
+        mamba_u, lora_u, ssm_c, attn_c = inp
+        h2, nst, nattn = _hybrid_unit_body(
+            cfg, params["shared"], h, x0, mamba_u, lora_u,
+            ssm_states=ssm_c, attn_cache=attn_c, pos=0,
+        )
+        return h2, (nst, nattn)
+
+    x, (nssm, nattn) = _scan(
+        body, x, (params["mamba"], params["lora"], cache["ssm"], cache["attn"]), remat
+    )
+    nssm = jax.tree.map(lambda a, c: a.astype(c.dtype), nssm, cache["ssm"])
+    ncache = {"ssm": nssm, "attn": nattn, "x0": cache["x0"]}
+    return _prefill_head(params, cfg, x), ncache
+
+
+def _decode_hybrid(params, cfg: ModelConfig, token, cache, pos):
+    x = _embed(params["embed"], cfg, token, pos_offset=pos)
+    x0 = x
+
+    def body(h, inp):
+        mamba_u, lora_u, ssm_c, attn_c = inp
+        h2, nst, nattn = _hybrid_unit_body(
+            cfg, params["shared"], h, x0, mamba_u, lora_u,
+            ssm_states=ssm_c, attn_cache=attn_c, pos=pos, decode=True,
+        )
+        return h2, (nst, nattn)
+
+    x, (nssm, nattn) = _scan(
+        body, x, (params["mamba"], params["lora"], cache["ssm"], cache["attn"]),
+        False, cfg.scan_layers,
+    )
+    ncache = {"ssm": nssm, "attn": nattn, "x0": cache["x0"]}
+    return _head(params["embed"], cfg, x), ncache
+
+
+# ==========================================================================
+# audio (whisper) encoder-decoder family
+# ==========================================================================
+def _init_enc_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = _dtype(cfg)
+    a = _attn_dims(cfg)
+    a = L.AttnDims(**{**a.__dict__, "causal": False, "use_rope": False})
+    return {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "attn": L.init_attention(ks[0], a, dt),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dt),
+    }
+
+
+def _enc_block_fwd(p, cfg: ModelConfig, x):
+    a = _attn_dims(cfg)
+    a = L.AttnDims(**{**a.__dict__, "causal": False, "use_rope": False})
+    h, _ = L.attention_fwd(p["attn"], a, L.apply_norm(cfg.norm, p["ln1"], x))
+    x = x + h
+    return x + L.mlp_fwd(p["mlp"], L.apply_norm(cfg.norm, p["ln2"], x), cfg.mlp_act)
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    return {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "attn": L.init_attention(ks[0], _attn_dims(cfg), dt),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "xattn": L.init_attention(ks[1], _attn_dims(cfg, cross=True), dt),
+        "ln3": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_act, dt),
+    }
+
+
+def _dec_block_fwd(p, cfg: ModelConfig, x, enc_kv, cache=None, cache_pos=None):
+    h, ncache = L.attention_fwd(
+        p["attn"], _attn_dims(cfg), L.apply_norm(cfg.norm, p["ln1"], x),
+        cache=cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    h, _ = L.attention_fwd(
+        p["xattn"], _attn_dims(cfg, cross=True),
+        L.apply_norm(cfg.norm, p["ln2"], x), cache=enc_kv,
+    )
+    x = x + h
+    return x + L.mlp_fwd(p["mlp"], L.apply_norm(cfg.norm, p["ln3"], x), cfg.mlp_act), ncache
+
+
+def _init_audio_family(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        "embed": _init_embed(k1, cfg),
+        "enc_pos": L._normal(k2, (cfg.n_frontend_tokens, cfg.d_model), dt),
+        "enc_blocks": _stacked_init(lambda k: _init_enc_block(k, cfg), k3, cfg.n_enc_layers),
+        "enc_ln_f": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "dec_blocks": _stacked_init(lambda k: _init_dec_block(k, cfg), k4, cfg.n_layers),
+    }
+
+
+def _encode_audio(params, cfg: ModelConfig, audio, remat=True):
+    x = audio.astype(_dtype(cfg)) + params["enc_pos"]
+
+    def body(h, lp):
+        return _enc_block_fwd(lp, cfg, h), 0.0
+
+    x, _ = _scan(body, x, params["enc_blocks"], remat, cfg.scan_layers)
+    return L.apply_norm(cfg.norm, params["enc_ln_f"], x)
+
+
+def _fwd_audio(params, cfg: ModelConfig, batch, remat=True):
+    enc = _encode_audio(params, cfg, batch["audio"], remat)
+    x = _embed(params["embed"], cfg, batch["tokens"])
+
+    def body(h, lp):
+        enc_kv = _cross_kv(lp["xattn"], cfg, enc)
+        h2, _ = _dec_block_fwd(lp, cfg, h, enc_kv)
+        return h2, 0.0
+
+    x, _ = _scan(body, x, params["dec_blocks"], remat, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), jnp.asarray(0.0)
+
+
+def _audio_cache(cfg: ModelConfig, B, cache_len, dtype):
+    kshape = (cfg.n_layers, B, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (cfg.n_layers, B, cfg.n_frontend_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kshape, dtype), "v": jnp.zeros(kshape, dtype),
+        "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype),
+    }
+
+
+def _prefill_audio(params, cfg: ModelConfig, batch, cache, remat=True):
+    enc = _encode_audio(params, cfg, batch["audio"], remat)
+    x = _embed(params["embed"], cfg, batch["tokens"])
+
+    def body(h, inp):
+        lp, cl = inp
+        enc_kv = _cross_kv(lp["xattn"], cfg, enc)
+        h2, nc = _dec_block_fwd(
+            lp, cfg, h, enc_kv, cache={"k": cl["k"], "v": cl["v"]}, cache_pos=0
+        )
+        return h2, {**nc, "xk": enc_kv["k"].astype(cl["xk"].dtype),
+                    "xv": enc_kv["v"].astype(cl["xv"].dtype)}
+
+    x, ncache = _scan(body, x, (params["dec_blocks"], cache), remat, cfg.scan_layers)
+    return _prefill_head(params, cfg, x), ncache
+
+
+def _decode_audio(params, cfg: ModelConfig, token, cache, pos):
+    x = _embed(params["embed"], cfg, token, pos_offset=pos)
+
+    def body(h, inp):
+        lp, cl = inp
+        enc_kv = {"k": cl["xk"], "v": cl["xv"]}
+        h2, nc = _dec_block_fwd(
+            lp, cfg, h, enc_kv, cache={"k": cl["k"], "v": cl["v"]}, cache_pos=pos
+        )
+        return h2, {**nc, "xk": cl["xk"], "xv": cl["xv"]}
+
+    x, ncache = _scan(body, x, (params["dec_blocks"], cache), False, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), ncache
+
+
+# ==========================================================================
+# vlm (llama-3.2-vision) family: units of cross_attn_period decoder layers,
+# position (period-2) is a gated cross-attention block over image patches
+# ==========================================================================
+def _vlm_counts(cfg: ModelConfig):
+    p = cfg.cross_attn_period
+    assert cfg.n_layers % p == 0
+    return cfg.n_layers // p, p
+
+
+def _init_vlm_family(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_units, period = _vlm_counts(cfg)
+
+    def unit_selfs(k):
+        return _stacked_init(lambda kk: _init_dense_block(kk, cfg), k, period - 1)
+
+    return {
+        "embed": _init_embed(k1, cfg),
+        "selfs": _stacked_init(unit_selfs, k2, n_units),
+        "cross": _stacked_init(lambda k: _init_cross_block(k, cfg, gated=True), k3, n_units),
+    }
+
+
+def _vlm_unit_body(cfg, x, selfs_u, cross_u, img_kv, self_caches=None, pos=None):
+    """period-1 self layers with the gated cross block inserted before the
+    last one (llama-3.2 layout: cross at in-unit index period-2)."""
+    _, period = _vlm_counts(cfg)
+    new_caches = []
+
+    def run_self(x, j, cl):
+        lp = jax.tree.map(lambda a: a[j], selfs_u)
+        x, _, nc = _dense_block_fwd(lp, cfg, x, cache=cl, cache_pos=pos)
+        return x, nc
+
+    for j in range(period - 2):
+        cl = None if self_caches is None else jax.tree.map(lambda a: a[j], self_caches)
+        x, nc = run_self(x, j, cl)
+        new_caches.append(nc)
+    x = _cross_block_fwd(cross_u, cfg, x, img_kv)
+    cl = None if self_caches is None else jax.tree.map(lambda a: a[period - 2], self_caches)
+    x, nc = run_self(x, period - 2, cl)
+    new_caches.append(nc)
+    if self_caches is not None:
+        new_caches = jax.tree.map(lambda *a: jnp.stack(a), *new_caches)
+    else:
+        new_caches = None
+    return x, new_caches
+
+
+def _fwd_vlm(params, cfg: ModelConfig, batch, remat=True):
+    x = _embed(params["embed"], cfg, batch["tokens"])
+    img = batch["image_embeds"].astype(_dtype(cfg))
+
+    def body(h, inp):
+        selfs_u, cross_u = inp
+        img_kv = _cross_kv(cross_u["xattn"], cfg, img)
+        h2, _ = _vlm_unit_body(cfg, h, selfs_u, cross_u, img_kv)
+        return h2, 0.0
+
+    x, _ = _scan(body, x, (params["selfs"], params["cross"]), remat, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), jnp.asarray(0.0)
+
+
+def _vlm_cache(cfg: ModelConfig, B, cache_len, dtype):
+    n_units, period = _vlm_counts(cfg)
+    kshape = (n_units, period - 1, B, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    xshape = (n_units, B, cfg.n_frontend_tokens, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kshape, dtype), "v": jnp.zeros(kshape, dtype),
+        "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype),
+    }
+
+
+def _prefill_vlm(params, cfg: ModelConfig, batch, cache, remat=True):
+    x = _embed(params["embed"], cfg, batch["tokens"])
+    img = batch["image_embeds"].astype(_dtype(cfg))
+
+    def body(h, inp):
+        selfs_u, cross_u, cl = inp
+        img_kv = _cross_kv(cross_u["xattn"], cfg, img)
+        h2, ncs = _vlm_unit_body(
+            cfg, h, selfs_u, cross_u, img_kv,
+            self_caches={"k": cl["k"], "v": cl["v"]}, pos=0,
+        )
+        return h2, {**ncs, "xk": img_kv["k"].astype(cl["xk"].dtype),
+                    "xv": img_kv["v"].astype(cl["xv"].dtype)}
+
+    x, ncache = _scan(body, x, (params["selfs"], params["cross"], cache), remat, cfg.scan_layers)
+    return _prefill_head(params, cfg, x), ncache
+
+
+def _decode_vlm(params, cfg: ModelConfig, token, cache, pos):
+    x = _embed(params["embed"], cfg, token, pos_offset=pos)
+
+    def body(h, inp):
+        selfs_u, cross_u, cl = inp
+        img_kv = {"k": cl["xk"], "v": cl["xv"]}
+        h2, ncs = _vlm_unit_body(
+            cfg, h, selfs_u, cross_u, img_kv,
+            self_caches={"k": cl["k"], "v": cl["v"]}, pos=pos,
+        )
+        return h2, {**ncs, "xk": cl["xk"], "xv": cl["xv"]}
+
+    x, ncache = _scan(body, x, (params["selfs"], params["cross"], cache), False, cfg.scan_layers)
+    return _head(params["embed"], cfg, x), ncache
+
+
+# ==========================================================================
+# public API
+# ==========================================================================
+def init_params(cfg: ModelConfig, key) -> Params:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _init_dense_family(cfg, key)
+    if fam == "ssm":
+        return _init_ssm_family(cfg, key)
+    if fam == "hybrid":
+        return _init_hybrid_family(cfg, key)
+    if fam == "audio":
+        return _init_audio_family(cfg, key)
+    if fam == "vlm":
+        return _init_vlm_family(cfg, key)
+    raise ValueError(fam)
+
+
+def forward(params, batch, cfg: ModelConfig, remat=True):
+    """Full-sequence forward -> (logits (B,S,V) f32, moe aux loss)."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _fwd_dense(params, cfg, batch["tokens"], remat)
+    if fam == "ssm":
+        return _fwd_ssm(params, cfg, batch["tokens"], remat)
+    if fam == "hybrid":
+        return _fwd_hybrid(params, cfg, batch["tokens"], remat)
+    if fam == "audio":
+        return _fwd_audio(params, cfg, batch, remat)
+    if fam == "vlm":
+        return _fwd_vlm(params, cfg, batch, remat)
+    raise ValueError(fam)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, tc: TrainConfig):
+    logits, aux = forward(params, batch, cfg, remat=tc.remat)
+    labels = batch["tokens"][:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    ce = -jnp.mean(
+        jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32), axis=-1)
+    )
+    loss = ce + tc.moe_aux_weight * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int, dtype=None) -> Params:
+    dtype = dtype or _dtype(cfg)
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _dense_cache(cfg, B, cache_len, dtype)
+    if fam == "ssm":
+        return _ssm_cache(cfg, B, cache_len, dtype)
+    if fam == "hybrid":
+        return _hybrid_cache(cfg, B, cache_len, dtype)
+    if fam == "audio":
+        return _audio_cache(cfg, B, cache_len, dtype)
+    if fam == "vlm":
+        return _vlm_cache(cfg, B, cache_len, dtype)
+    raise ValueError(fam)
+
+
+def prefill(params, batch, cache, cfg: ModelConfig, remat=True):
+    """Fill the cache from a full prompt -> (logits (B,S,V), cache)."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _prefill_dense(params, cfg, batch["tokens"], cache, remat)
+    if fam == "ssm":
+        return _prefill_ssm(params, cfg, batch["tokens"], cache, remat)
+    if fam == "hybrid":
+        return _prefill_hybrid(params, cfg, batch["tokens"], cache, remat)
+    if fam == "audio":
+        return _prefill_audio(params, cfg, batch, cache, remat)
+    if fam == "vlm":
+        return _prefill_vlm(params, cfg, batch, cache, remat)
+    raise ValueError(fam)
+
+
+def decode_step(params, batch, cache, cfg: ModelConfig):
+    """One-token decode.  batch: {'token': (B,1), 'pos': scalar}."""
+    token, pos = batch["token"], batch["pos"]
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _decode_dense(params, cfg, token, cache, pos)
+    if fam == "ssm":
+        return _decode_ssm(params, cfg, token, cache, pos)
+    if fam == "hybrid":
+        return _decode_hybrid(params, cfg, token, cache, pos)
+    if fam == "audio":
+        return _decode_audio(params, cfg, token, cache, pos)
+    if fam == "vlm":
+        return _decode_vlm(params, cfg, token, cache, pos)
+    raise ValueError(fam)

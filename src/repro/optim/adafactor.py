@@ -1,0 +1,61 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moment for >=2D params
+(row+col accumulators instead of a full moment tensor) — the optimizer of
+choice for the 100B+ MoE archs where AdamW moments would not fit HBM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params):
+    def per_param(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row accum
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "acc": jax.tree.map(per_param, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def update(grads, state, params, lr, decay=0.8, eps=1e-30, clip_thresh=1.0, weight_decay=0.0):
+    count = state["count"] + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(g, acc, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            vr = beta * acc["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * acc["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            new_acc = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta * acc["v"] + (1 - beta) * g2
+            new_acc = {"v": vhat}
+        u = gf / jnp.sqrt(jnp.maximum(vhat, eps))
+        # update clipping (RMS threshold)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_thresh)
+        step = lr * u
+        if weight_decay > 0.0 and p.ndim >= 2:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), new_acc
+
+    out = jax.tree_util.tree_map(
+        upd, grads, state["acc"], params,
+        is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x),
+    )
+    is_pair = lambda x: isinstance(x, tuple)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_acc = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return new_params, {"acc": new_acc, "count": count}

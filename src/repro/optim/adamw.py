@@ -1,0 +1,50 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Moments live in a configurable dtype (fp32 default; bf16 for the very
+large archs so optimizer state stays within HBM — see sharding policy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params, moment_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def update(grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01):
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        step = lr * (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if weight_decay > 0.0 and p.ndim >= 2:  # no decay on norms/biases
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,25 @@
+"""LR schedules: cosine, WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395),
+constant-with-warmup.  Pure functions of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, lr: float, warmup: int, total: int):
+    warmup = max(1, warmup)
+
+    def cosine(step):
+        w = jnp.minimum(step / warmup, 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        return lr * w * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+    def wsd(step):
+        w = jnp.minimum(step / warmup, 1.0)
+        decay_start = int(0.9 * total)  # final 10%: exponential-ish decay
+        t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+        return lr * w * jnp.where(step < decay_start, 1.0, 0.5 ** (10.0 * t))
+
+    def constant(step):
+        return lr * jnp.minimum(step / warmup, 1.0)
+
+    return {"cosine": cosine, "wsd": wsd, "constant": constant}[kind]

@@ -1,0 +1,88 @@
+"""Fault-tolerant execution: resilient step loop + straggler telemetry.
+
+The paper's failure mode was GPU-init stragglers on 512 MPI workers
+(median 4.6 s, max 22.9 s — SSIV-B2).  On TPU pods the analogues are
+preemption, ICI link flaps, and host restarts; the mitigation is the same
+shape: bounded-retry around the step, restore-from-checkpoint on failure,
+and per-step timing telemetry that flags outliers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Optional
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclasses.dataclass
+class StepTelemetry:
+    """EMA-based straggler detector: a step slower than `threshold` x the
+    EMA is logged (on hardware, it would also be exported to monitoring)."""
+
+    ema: float = 0.0
+    alpha: float = 0.1
+    threshold: float = 3.0
+    n_stragglers: int = 0
+    n_steps: int = 0
+
+    def record(self, dt: float) -> bool:
+        self.n_steps += 1
+        is_straggler = self.ema > 0 and dt > self.threshold * self.ema
+        if is_straggler:
+            self.n_stragglers += 1
+            log.warning("straggler step: %.3fs vs EMA %.3fs", dt, self.ema)
+        self.ema = dt if self.ema == 0 else (1 - self.alpha) * self.ema + self.alpha * dt
+        return is_straggler
+
+
+class ResilientLoop:
+    """Run `step_fn(state, batch) -> (state, metrics)` with checkpoint/restart.
+
+    On any exception: restore the last checkpoint (elastic — the mesh may
+    have changed) and replay.  `max_retries` consecutive failures abort.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        ckpt,  # CheckpointManager
+        save_every: int = 100,
+        max_retries: int = 3,
+    ):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.save_every = save_every
+        self.max_retries = max_retries
+        self.telemetry = StepTelemetry()
+
+    def run(self, state, batch_at, n_steps: int, start_step: int = 0, shardings=None):
+        """batch_at: step -> batch pytree (a deterministic stream, so a
+        restore also REWINDS THE DATA — replay is bit-exact).  Returns
+        (state, final_step, last_metrics)."""
+        step = start_step
+        retries = 0
+        metrics = None
+        while step < n_steps:
+            try:
+                batch = batch_at(step)
+                t0 = time.time()
+                state, metrics = self.step_fn(state, batch)
+                # materialize before declaring success (async dispatch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                self.telemetry.record(time.time() - t0)
+                step += 1
+                retries = 0
+                if step % self.save_every == 0:
+                    self.ckpt.save(step, state)
+            except Exception as e:  # noqa: BLE001 — the whole point
+                retries += 1
+                log.error("step %d failed (%s); retry %d/%d", step, e, retries, self.max_retries)
+                if retries > self.max_retries:
+                    raise
+                restored = self.ckpt.restore_latest(state, shardings)
+                if restored[0] is not None:
+                    step, state = restored
+        self.ckpt.save(step, state, blocking=True)
+        return state, step, metrics

@@ -1,0 +1,59 @@
+"""Ambient sharding context: lets layer code place with_sharding_constraint
+on internal activations (e.g. sequence-parallel attention) without threading
+mesh/policy through every call signature.
+
+Set by the launcher/dry-run around tracing:
+
+    with sharding_ctx(mesh, policy):
+        jitted.lower(...)
+
+`constrain(x, *spec_axes)` is a no-op outside the context, so model code
+stays runnable on a single device / in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX = contextvars.ContextVar("repro_shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, policy):
+    tok = _CTX.set((mesh, policy))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current_policy():
+    ctx = _CTX.get()
+    return ctx[1] if ctx else None
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_seq_parallel(x: jax.Array, seq_axis: int) -> jax.Array:
+    """Shard dim `seq_axis` on the model axis, batch dim 0 on the dp axes
+    (divisibility-checked) — used by sequence-parallel attention."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, policy = ctx
+    if policy.dp_only:
+        return x  # model axis already consumed by batch parallelism
+    spec = [None] * x.ndim
+    spec[0] = policy._fit(policy.dp, x.shape[0])
+    if x.shape[seq_axis] % policy.axis_size("model") == 0:
+        spec[seq_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

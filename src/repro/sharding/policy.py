@@ -1,0 +1,208 @@
+"""Divisibility-aware sharding policy: param/batch/cache PartitionSpecs.
+
+Strategy (DESIGN.md SS6):
+  * batch dims -> all data-parallel axes ("pod", "data");
+  * weights: Megatron column/row tensor-parallel on "model"
+    (column: d_ff / head projections; row: their inverses); vocab-parallel
+    embedding + LM head (vocab padded to a multiple of 256);
+  * FSDP (ZeRO-3): for large models the non-TP weight dim is additionally
+    sharded on "data" — XLA all-gathers each layer's weights inside the
+    scan-over-layers, which overlaps gather with compute;
+  * MoE: expert-parallel on "model" when n_experts divides the axis, else
+    tensor-parallel inside each expert;
+  * decode caches: KV sharded along the *sequence* dim on "model"
+    (flash-decode style — works for every kv-head count, balances memory;
+    XLA inserts the small softmax-stat all-reduces), SSM states sharded on
+    heads;
+  * every rule degrades to replication when a dim is not divisible by the
+    axis size (recorded — the roofline table shows the resulting all-gather
+    cost, and hillclimbs may revisit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Any
+    fsdp: bool = False  # shard weights on "data" too (ZeRO-3)
+    seq_shard_cache: bool = True  # decode KV cache sharded along seq
+    # dp_only: replicate weights, use the model axis as EXTRA batch
+    # parallelism — the right regime for sub-1B archs where TP-16 only
+    # replicates attention compute and adds collectives (SSPerf hillclimb).
+    dp_only: bool = False
+
+    @property
+    def dp(self) -> tuple[str, ...]:
+        return tuple(a for a in self.mesh.axis_names if a in ("pod", "data"))
+
+    @property
+    def tp(self):
+        return None if self.dp_only else "model"
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        return self.dp + (("model",) if self.dp_only else ())
+
+    def axis_size(self, name) -> int:
+        if isinstance(name, tuple):
+            return int(np.prod([self.axis_size(a) for a in name]))
+        return self.mesh.shape[name]
+
+    def _fit(self, axis, dim: int):
+        """axis if dim divides the axis size, else None (replicate)."""
+        if axis is None:
+            return None
+        return axis if dim % self.axis_size(axis) == 0 else None
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return "data" if self.fsdp else None
+
+
+def auto_policy(cfg: ModelConfig, mesh, n_params: int | None = None) -> ShardingPolicy:
+    """FSDP kicks in when replicated-over-data weights would not fit:
+    > ~2B params (bf16 params + grads + fp32 moments / 16-way TP)."""
+    if n_params is None:
+        n_params = estimate_params(cfg)
+    return ShardingPolicy(mesh=mesh, fsdp=n_params > 2_000_000_000)
+
+
+def estimate_params(cfg: ModelConfig) -> int:
+    """Abstract param count via eval_shape (no allocation)."""
+    from repro.models import transformer
+
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+_COL_PARENTS = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj"}  # (din, dout): TP on dout
+_ROW_PARENTS = {"wo", "w_down", "out_proj"}  # (din, dout): TP on din
+_REPLICATED_LEAVES = {
+    "scale", "bias", "A_log", "D", "dt_bias", "norm_scale",
+    "gate_attn", "gate_mlp", "router",
+}
+
+
+def _path_names(path) -> list[str]:
+    return [p.key for p in path if hasattr(p, "key")]
+
+
+def param_spec(policy: ShardingPolicy, path, ndim: int, shape) -> P:
+    names = _path_names(path)
+    leaf = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    fsdp, tp = policy.fsdp_axis, policy.tp
+    in_moe = "moe" in names
+
+    def lead(spec_tail: tuple) -> P:
+        # leading scan/stack dims (layers, units, per-unit) stay unsharded
+        return P(*([None] * (ndim - len(spec_tail)) + list(spec_tail)))
+
+    if leaf in _REPLICATED_LEAVES:
+        return P(*([None] * ndim))
+    if leaf == "tok":  # (vocab, d): vocab-parallel embedding
+        return lead((policy._fit(tp, shape[-2]), policy._fit(fsdp, shape[-1])))
+    if leaf == "lm_head":  # (d, vocab)
+        return lead((policy._fit(fsdp, shape[-2]), policy._fit(tp, shape[-1])))
+    if leaf == "pos" or leaf == "enc_pos":  # (S, d)
+        return lead((None, policy._fit(tp, shape[-1])))
+    if in_moe and leaf in ("w_up", "w_gate", "w_down"):  # (E, d, f) / (E, f, d)
+        E = shape[-3]
+        if E % policy.axis_size(tp) == 0:  # expert-parallel
+            return lead((tp, policy._fit(fsdp, shape[-2]), None))
+        if leaf == "w_down":  # TP inside experts: contract dim f
+            return lead((None, policy._fit(tp, shape[-2]), policy._fit(fsdp, shape[-1])))
+        return lead((None, policy._fit(fsdp, shape[-2]), policy._fit(tp, shape[-1])))
+    if leaf == "conv_w":  # (d_conv, conv_dim)
+        return lead((None, policy._fit(tp, shape[-1])))
+    if leaf == "conv_b":
+        return lead((policy._fit(tp, shape[-1]),))
+    if leaf.startswith("a_"):  # lora in: (2d, r)
+        return lead((policy._fit(fsdp, shape[-2]), None))
+    if leaf.startswith("b_"):  # lora out: (r, dout)
+        return lead((None, policy._fit(tp, shape[-1])))
+    if leaf == "w" and parent in _COL_PARENTS:
+        return lead((policy._fit(fsdp, shape[-2]), policy._fit(tp, shape[-1])))
+    if leaf == "w" and parent in _ROW_PARENTS:
+        return lead((policy._fit(tp, shape[-2]), policy._fit(fsdp, shape[-1])))
+    if leaf == "b" and parent in _COL_PARENTS:
+        return lead((policy._fit(tp, shape[-1]),))
+    if leaf == "b":
+        return lead((None,))
+    # default: replicate (and make it visible in reviews)
+    return P(*([None] * ndim))
+
+
+def param_specs(policy: ShardingPolicy, params_tree) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: param_spec(policy, path, x.ndim, x.shape), params_tree
+    )
+
+
+def param_shardings(policy: ShardingPolicy, params_tree) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(policy.mesh, s), param_specs(policy, params_tree)
+    )
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+def batch_specs(policy: ShardingPolicy, batch_tree, kind: str) -> Any:
+    def spec(path, x):
+        names = _path_names(path)
+        leaf = names[-1]
+        if leaf == "pos":
+            return P()
+        dp = policy._fit(policy.batch_axes, x.shape[0])
+        if leaf in ("tokens", "token"):
+            return P(dp, None)
+        if leaf in ("audio", "image_embeds"):
+            return P(dp, None, None)
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_specs_tree(policy: ShardingPolicy, cache_tree, cfg: ModelConfig) -> Any:
+    """Decode caches.  KV: (layers..., B, S, K, dh) -> seq sharded on model.
+    SSM states: heads sharded on model.  Cross-KV: source-seq sharded."""
+    tp = policy.tp
+
+    def spec(path, x):
+        names = _path_names(path)
+        leaf = names[-1]
+        lead = x.ndim - 4  # stacked layer/unit dims before (B, S, K, dh)
+        if leaf in ("k", "v", "xk", "xv"):
+            dp = policy._fit(policy.batch_axes, x.shape[lead])
+            seq_ax = (
+                policy._fit(tp, x.shape[-3]) if policy.seq_shard_cache else None
+            )
+            kv_ax = None if seq_ax else policy._fit(tp, x.shape[-2])
+            return P(*([None] * lead + [dp, seq_ax, kv_ax, None]))
+        if leaf == "ssm":  # (..., B, H, P, N)
+            dp = policy._fit(policy.batch_axes, x.shape[x.ndim - 4])
+            return P(*([None] * (x.ndim - 4) + [dp, policy._fit(tp, x.shape[-3]), None, None]))
+        if leaf == "conv":  # (..., B, w, conv_dim)
+            dp = policy._fit(policy.batch_axes, x.shape[x.ndim - 3])
+            return P(*([None] * (x.ndim - 3) + [dp, None, policy._fit(tp, x.shape[-1])]))
+        if leaf == "x0":
+            dp = policy._fit(policy.batch_axes, x.shape[x.ndim - 3])
+            return P(*([None] * (x.ndim - 3) + [dp, None, None]))
+        return P(*([None] * x.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

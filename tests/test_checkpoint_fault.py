@@ -1,0 +1,142 @@
+"""Checkpoint/restart + fault-tolerance: bit-exact kill/resume, atomic
+commit, GC, resilient-loop retry, straggler telemetry, EDM row-block
+resume (including elastic resume with a different chunk size)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import TokenStream
+from repro.launch.steps import TrainState, make_train_step
+from repro.runtime.fault import ResilientLoop, StepTelemetry
+
+
+def _setup(tmp):
+    cfg = get_config("smollm-135m", smoke=True)
+    tc = TrainConfig(remat=False, lr=1e-3, warmup_steps=1, total_steps=20)
+    state = TrainState.create(cfg, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tc))
+    stream = TokenStream(cfg.vocab_size, 2, 16, seed=0)
+    return cfg, tc, state, step, stream
+
+
+def test_checkpoint_roundtrip_bitexact(tmp_path):
+    _, _, state, step, stream = _setup(tmp_path)
+    state, _ = step(state, stream.batch_at(0))
+    ckpt = CheckpointManager(tmp_path, keep_last=2)
+    ckpt.save(1, state, blocking=True)
+    restored = ckpt.restore(1, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kill_and_resume_is_bitexact(tmp_path):
+    """train 6 steps straight == train 3, 'crash', restore, train 3 more."""
+    _, _, state0, step, stream = _setup(tmp_path)
+
+    sA = state0
+    for i in range(6):
+        sA, _ = step(sA, stream.batch_at(i))
+
+    sB = state0
+    for i in range(3):
+        sB, _ = step(sB, stream.batch_at(i))
+    ckpt = CheckpointManager(tmp_path / "c", keep_last=2)
+    ckpt.save(3, sB, blocking=True)
+    del sB  # "crash"
+    step_n, sB = ckpt.restore_latest(jax.eval_shape(lambda: state0))
+    assert step_n == 3
+    for i in range(3, 6):
+        sB, _ = step(sB, stream.batch_at(i))
+    for a, b in zip(jax.tree.leaves(sA), jax.tree.leaves(sB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_last_gc_and_latest(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep_last=2)
+    tree = {"a": jnp.arange(4)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, tree, blocking=True)
+    assert ckpt.all_steps() == [3, 4]
+    assert ckpt.latest_step() == 4
+
+
+def test_async_save_then_wait(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep_last=1)
+    ckpt.save(7, {"w": jnp.ones((256, 256))})
+    ckpt.wait()
+    assert ckpt.latest_step() == 7
+
+
+def test_resilient_loop_recovers_from_injected_failure(tmp_path):
+    _, _, state, step, stream = _setup(tmp_path)
+    ckpt = CheckpointManager(tmp_path, keep_last=2)
+    ckpt.save(0, state, blocking=True)
+    calls = {"n": 0}
+
+    def flaky_step(s, b):
+        calls["n"] += 1
+        if calls["n"] == 3:  # one transient failure
+            raise RuntimeError("simulated preemption")
+        return step(s, b)
+
+    loop = ResilientLoop(flaky_step, ckpt, save_every=2, max_retries=2)
+    final, step_n, _ = loop.run(state, stream.batch_at, n_steps=5)
+    assert step_n == 5
+    assert loop.telemetry.n_steps >= 5
+    # the recovery replayed from the step-2 checkpoint: same final state as
+    # an uninterrupted run (deterministic stream + bit-exact restore)
+    clean = state
+    for i in range(5):
+        clean, _ = step(clean, stream.batch_at(i))
+    for a, b in zip(jax.tree.leaves(clean.params), jax.tree.leaves(final.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resilient_loop_gives_up_after_max_retries(tmp_path):
+    _, _, state, step, stream = _setup(tmp_path)
+    ckpt = CheckpointManager(tmp_path, keep_last=1)
+    ckpt.save(0, state, blocking=True)
+
+    def always_fails(s, b):
+        raise RuntimeError("hard failure")
+
+    loop = ResilientLoop(always_fails, ckpt, save_every=10, max_retries=2)
+    with pytest.raises(RuntimeError):
+        loop.run(state, stream.batch_at, n_steps=1)
+
+
+def test_straggler_telemetry():
+    t = StepTelemetry(threshold=2.0)
+    for _ in range(10):
+        t.record(1.0)
+    assert t.record(5.0) is True
+    assert t.n_stragglers == 1
+
+
+def test_edm_pipeline_resume_and_elastic(tmp_path, small_network):
+    """Kill the CCM phase mid-run; resume — even with a different chunk
+    size (elastic) — and match the uninterrupted result exactly."""
+    from repro.core.pipeline import run_causal_inference
+    from repro.core.types import EDMConfig
+    from repro.data.store import RowBlockWriter
+
+    ts, _ = small_network
+    cfg = EDMConfig(E_max=4, lib_block=3)
+    full = run_causal_inference(ts, cfg)
+
+    out = tmp_path / "rho"
+    # simulate a partial run: compute only the first block then "crash"
+    partial = RowBlockWriter(out, ts.shape[0])
+    partial.write_block(0, full.rho[:4])
+    # resume with a DIFFERENT worker-chunk size (elastic restart)
+    resumed = run_causal_inference(
+        ts, EDMConfig(E_max=4, lib_block=2), out_dir=str(out)
+    )
+    np.testing.assert_allclose(resumed.rho, full.rho, rtol=1e-6, atol=1e-6)

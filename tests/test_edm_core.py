@@ -1,0 +1,153 @@
+"""EDM core correctness: embeddings, weights, simplex, improved-vs-naive
+CCM equivalence, and causal-direction recovery on known systems."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EDMConfig,
+    ccm_convergence,
+    ccm_matrix,
+    ccm_naive,
+    delay_embed,
+    lag_matrix,
+    pearson,
+    simplex_batch,
+    simplex_weights,
+)
+
+
+# ---------------------------------------------------------------- embedding
+def test_lag_matrix_matches_delay_embed():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(64), jnp.float32)
+    E_max, tau, Lp = 5, 2, 64 - 4 * 2
+    V = lag_matrix(x, E_max, tau, Lp)
+    emb = delay_embed(x, E_max, tau)
+    # V[k, t] is the k-th lag of point t; delay_embed rows are points
+    assert V.shape == (E_max, Lp)
+    np.testing.assert_allclose(np.asarray(V.T), np.asarray(emb)[:Lp], rtol=0, atol=0)
+
+
+@given(
+    E=st.integers(1, 6),
+    tau=st.integers(1, 3),
+    L=st.integers(40, 120),
+)
+@settings(max_examples=15, deadline=None)
+def test_embedding_point_invariant(E, tau, L):
+    """Every embedded point's coordinates are exact series values."""
+    rng = np.random.default_rng(E * 100 + tau)
+    x = rng.standard_normal(L).astype(np.float32)
+    Lp = L - (E - 1) * tau
+    emb = np.asarray(delay_embed(jnp.asarray(x), E, tau))
+    t = rng.integers(0, Lp)
+    p = t + (E - 1) * tau
+    np.testing.assert_array_equal(emb[t], x[[p - k * tau for k in range(E)]])
+
+
+# ------------------------------------------------------------------ weights
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_simplex_weights_are_a_distribution(seed):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(2, 22)
+    d = np.sort(rng.uniform(0, 10, size=(4, k)).astype(np.float32), axis=-1)
+    w = np.asarray(simplex_weights(jnp.asarray(d**2), k))
+    assert np.all(w >= 0)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-5)
+    # nearest neighbour never gets less weight than the farthest
+    assert np.all(w[:, 0] + 1e-6 >= w[:, -1])
+
+
+def test_pearson_bounds_and_degenerate():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal(100), jnp.float32)
+    assert abs(float(pearson(a, a)) - 1.0) < 1e-5
+    assert abs(float(pearson(a, -a)) + 1.0) < 1e-5
+    assert float(pearson(a, jnp.zeros(100))) == 0.0  # constant -> 0 skill
+
+
+# ------------------------------------------------- improved == naive (Alg 1 vs 2)
+def test_improved_ccm_equals_naive(small_network):
+    """mpEDM Alg. 2 == cppEDM Alg. 1 outputs.  Neighbour tables are
+    bit-identical (termwise-sequential distance accumulation, same
+    tie-breaking — checked below); rho tolerates only the fp reassociation
+    that vmap batching introduces in the final correlation sums."""
+    ts, _ = small_network
+    cfg = EDMConfig(E_max=6)
+    ts = jnp.asarray(ts)
+    _, optE = simplex_batch(ts, cfg)
+    rho_fast = np.asarray(ccm_matrix(ts, optE, cfg))
+    rho_naive = np.asarray(ccm_naive(ts, optE, cfg))
+    np.testing.assert_allclose(rho_fast, rho_naive, rtol=0, atol=1e-6)
+
+    # the tables themselves ARE bit-exact between the two algorithms
+    from repro.core import knn, lag_matrix
+
+    x = ts[0]
+    Lp = cfg.n_points(x.shape[0])
+    V = lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    idx_all, sqd_all = knn.knn_tables_all_E(V, V, cfg.k_max, exclude_self=True)
+    for E in (1, 3, 6):
+        idx_s, sqd_s = knn.knn_table_single_E(V, V, E, E + 1, exclude_self=True)
+        np.testing.assert_array_equal(
+            np.asarray(idx_all[E - 1][:, : E + 1]), np.asarray(idx_s)
+        )
+        # distances agree to 1 ulp (XLA fuses FMAs differently per path)
+        np.testing.assert_allclose(
+            np.asarray(sqd_all[E - 1][:, : E + 1]), np.asarray(sqd_s),
+            rtol=1e-6, atol=1e-8,
+        )
+
+
+def test_target_block_invariance(small_network):
+    """Chunking targets (lax.map blocks) must not change results."""
+    ts, _ = small_network
+    ts = jnp.asarray(ts)
+    _, optE = simplex_batch(ts, EDMConfig(E_max=5))
+    a = ccm_matrix(ts, optE, EDMConfig(E_max=5, target_block=3))
+    b = ccm_matrix(ts, optE, EDMConfig(E_max=5, target_block=1024))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------- causal inference quality
+def test_ccm_recovers_direction(coupled_pair):
+    """x drives y (beta_yx>0, beta_xy=0) => skill of x-hat|M_y exceeds
+    y-hat|M_x (Sugihara 2012)."""
+    cfg = EDMConfig(E_max=6)
+    ts = jnp.asarray(coupled_pair)
+    _, optE = simplex_batch(ts, cfg)
+    rho = np.asarray(ccm_matrix(ts, optE, cfg))
+    assert rho[1, 0] > rho[0, 1] + 0.1, rho
+
+
+def test_ccm_convergence_with_library_size(coupled_pair):
+    """True causation: rho increases with library size (the subsampling
+    test the paper's hot path omits, SSIII-A)."""
+    cfg = EDMConfig(E_max=4)
+    x, y = jnp.asarray(coupled_pair[0]), jnp.asarray(coupled_pair[1])
+    rhos = np.asarray(
+        ccm_convergence(y, x, 3, (40, 150, 700), cfg, jax.random.PRNGKey(0))
+    )
+    assert rhos[-1] > rhos[0], rhos
+
+
+def test_simplex_finds_low_dim_for_logistic(coupled_pair):
+    """The logistic map is 1-dimensional: optimal E should be small."""
+    cfg = EDMConfig(E_max=10)
+    _, optE = simplex_batch(jnp.asarray(coupled_pair), cfg)
+    assert int(optE[0]) <= 3
+
+
+def test_network_edges_score_higher(small_network):
+    ts, adj = small_network
+    cfg = EDMConfig(E_max=5)
+    ts = jnp.asarray(ts)
+    _, optE = simplex_batch(ts, cfg)
+    rho = np.asarray(ccm_matrix(ts, optE, cfg))
+    mask = ~np.eye(adj.shape[0], dtype=bool)
+    linked = rho.T[adj]
+    unlinked = rho.T[(~adj) & mask]
+    assert linked.mean() > unlinked.mean() + 0.05

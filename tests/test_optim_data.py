@@ -1,0 +1,113 @@
+"""Optimizers, schedules, gradient compression, data pipeline, store."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import Prefetcher, TokenStream
+from repro.data import store
+from repro.optim import adafactor, adamw, grad_compress
+from repro.optim.schedule import make_schedule
+
+
+def _quadratic_losses(opt_mod, steps=60, lr=0.1):
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+    target = {"w": jnp.asarray([0.5, 0.5]), "b": jnp.asarray(-0.5)}
+    state = opt_mod.init(params)
+
+    def loss_fn(p):
+        return sum(
+            jnp.sum((a - b) ** 2) for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(target))
+        )
+
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt_mod.update(g, state, params, lr)
+        losses.append(float(loss_fn(params)))
+    return losses
+
+
+def test_adamw_converges():
+    losses = _quadratic_losses(adamw)
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_adafactor_converges():
+    losses = _quadratic_losses(adafactor)
+    assert losses[-1] < 0.1 * losses[0]
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules_warmup_and_shape():
+    for kind in ("cosine", "wsd", "constant"):
+        s = make_schedule(kind, 1.0, warmup=10, total=100)
+        assert float(s(0)) < 0.11
+        assert float(s(10)) == pytest.approx(1.0, rel=1e-5)
+        assert float(s(99)) <= 1.0
+    cos = make_schedule("cosine", 1.0, 10, 100)
+    assert float(cos(99)) < 0.01
+
+
+# -------------------------------------------------------- grad compression
+@given(st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_error_bound(seed):
+    g = jnp.asarray(np.random.default_rng(seed).standard_normal(64), jnp.float32)
+    q, scale = grad_compress.quantize(g)
+    err = jnp.abs(grad_compress.dequantize(q, scale) - g)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_converges_on_quadratic():
+    """int8 + error feedback must still drive a quadratic to ~0."""
+    w = jnp.asarray([4.0, -3.0, 2.0, 5.0])
+    err = jnp.zeros_like(w)
+    lr = 0.05
+    for _ in range(400):
+        g = 2 * w  # grad of |w|^2
+        q, scale, err = grad_compress.compress_residual(g, err)
+        w = w - lr * grad_compress.dequantize(q, scale)
+    assert float(jnp.abs(w).max()) < 1e-2
+
+
+# -------------------------------------------------------------- data layer
+def test_token_stream_deterministic():
+    a = TokenStream(1000, 4, 16, seed=7).batch_at(5)
+    b = TokenStream(1000, 4, 16, seed=7).batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = TokenStream(1000, 4, 16, seed=8).batch_at(5)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_prefetcher_preserves_order():
+    stream = TokenStream(100, 2, 8, seed=0)
+    pf = Prefetcher(stream, n_steps=5)
+    got = [np.asarray(b["tokens"]) for b in pf]
+    assert len(got) == 5
+    for i, g in enumerate(got):
+        np.testing.assert_array_equal(g, stream.batch_at(i)["tokens"])
+
+
+def test_store_roundtrip(tmp_path):
+    ts = np.random.default_rng(0).standard_normal((8, 32)).astype(np.float32)
+    store.save_dataset(tmp_path / "ds", ts, {"name": "t"})
+    loaded = store.load_dataset(tmp_path / "ds")
+    np.testing.assert_array_equal(np.asarray(loaded), ts)
+
+
+def test_row_block_writer_coverage(tmp_path):
+    w = store.RowBlockWriter(tmp_path / "w", N=10)
+    w.write_block(0, np.ones((4, 10), np.float32))
+    w.write_block(7, np.ones((3, 10), np.float32))
+    assert w.next_uncovered() == 4
+    w.write_block(4, np.ones((3, 10), np.float32))
+    assert w.next_uncovered() is None
+    assert w.assemble().sum() == 100

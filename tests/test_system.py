@@ -1,0 +1,69 @@
+"""End-to-end behaviour tests for the whole system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_full_pipeline_recovers_network(tmp_path):
+    """Synthetic 'brain' -> distributed pipeline -> causal map separates
+    true edges from non-edges (AUC check) — the paper's scientific claim
+    at miniature scale."""
+    from repro.core.pipeline import run_causal_inference
+    from repro.core.types import EDMConfig
+    from repro.data.synthetic import logistic_network
+
+    ts, adj = logistic_network(14, 400, density=0.15, strength=0.3, seed=9)
+    out = run_causal_inference(ts, EDMConfig(E_max=5), out_dir=str(tmp_path / "o"))
+    rho = out.rho.T  # rho[dst, src] -> score for edge src->dst
+    mask = ~np.eye(14, dtype=bool)
+    pos, neg = rho[adj], rho[(~adj) & mask]
+    # rank-based AUC
+    allv = np.concatenate([pos, neg])
+    order = allv.argsort().argsort()
+    auc = (order[: len(pos)].mean() + 1 - (len(pos) + 1) / 2) / len(neg)
+    assert auc > 0.7, f"AUC {auc}"
+
+
+def test_train_lm_end_to_end_loss_decreases():
+    """~100M-class arch (smoke width) trained for 30 steps on a synthetic
+    stream: loss must drop materially from ln(V)."""
+    from repro.configs import get_config
+    from repro.configs.base import TrainConfig
+    from repro.data.pipeline import TokenStream
+    from repro.launch.steps import TrainState, make_train_step
+
+    cfg = get_config("smollm-135m", smoke=True)
+    tc = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=30, remat=False)
+    state = TrainState.create(cfg, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tc))
+    # narrow token range -> learnable unigram structure
+    stream = TokenStream(64, 4, 32, seed=0)
+    losses = []
+    for i in range(30):
+        state, m = step(state, stream.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+def test_serve_greedy_decode_runs():
+    """Prefill + 8 greedy decode steps with the serving API."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    cache = T.init_cache(cfg, B, S + 8, dtype=jnp.float32)
+    logits, cache = T.prefill(params, {"tokens": toks}, cache, cfg, remat=False)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    outs = []
+    for t in range(8):
+        logits, cache = T.decode_step(
+            params, {"token": tok, "pos": jnp.asarray(S + t, jnp.int32)}, cache, cfg
+        )
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs.append(int(tok[0, 0]))
+    assert len(outs) == 8
+    assert all(0 <= t < cfg.padded_vocab for t in outs)
