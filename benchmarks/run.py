@@ -44,6 +44,7 @@ from repro.core import (  # noqa: E402
 from repro.data.synthetic import dummy_brain  # noqa: E402
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+REPO = pathlib.Path(__file__).resolve().parents[1]
 
 
 def _time(fn, *args, reps=3) -> float:
@@ -226,6 +227,109 @@ def fig9b_knn_impl_variants():
         )
 
 
+# ------------------------------------------------------- phase-2 engine bench
+def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference"):
+    """Phase-2 wall clock: seed path (all-E tables, synchronous drain) vs
+    optE-bucketed tables + double-buffered chunk streaming (DESIGN.md
+    SS3/SS6), through the real pipeline chunk loop including the
+    RowBlockWriter.  Records engine name and bucket count to
+    BENCH_phase2.json so trajectories stay comparable across backends.
+    """
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.core import make_bucket_plan
+    from repro.core.pipeline import (
+        make_ccm_chunk_fn,
+        make_ccm_chunk_fn_bucketed,
+        _pad_rows,
+    )
+    from repro.data.store import RowBlockWriter
+    from repro.runtime.stream import ChunkStreamer
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("workers",))
+    base = dict(E_max=E_max, engine=engine, lib_block=8)
+    cfg_seed = EDMConfig(**base, bucketed=False, stream_depth=1)
+    cfg_new = EDMConfig(**base, bucketed=True, stream_depth=2)
+    chunk = mesh.size * cfg_seed.lib_block
+
+    ts = jnp.asarray(dummy_brain(N, L, seed=42))
+    _, optE = simplex_batch(ts, cfg_new)
+    optE_np = np.asarray(optE)
+    plan, order = make_bucket_plan(optE_np)
+    ts_fut = all_futures(ts, cfg_new)
+    ts_np = np.asarray(ts)
+
+    def run_loop(chunk_fn, args_of_rows, unsort, depth, out_dir):
+        writer = RowBlockWriter(out_dir, N)
+        rho = np.zeros((N, N), np.float32)
+
+        def drain(tag, rows_dev):
+            row0, valid = tag
+            rows_np = unsort(rows_dev)[:valid]
+            rho[row0 : row0 + valid] = rows_np
+            writer.write_block(row0, rows_np)
+
+        t0 = time.perf_counter()
+        with ChunkStreamer(drain, depth=depth) as s:
+            for row0 in range(0, N, chunk):
+                valid = min(chunk, N - row0)
+                rows = _pad_rows(ts_np[row0 : row0 + chunk], chunk)
+                s.submit((row0, valid), chunk_fn(*args_of_rows(rows)))
+        return time.perf_counter() - t0, rho
+
+    inv = np.argsort(order)
+    ts_fut_sorted = ts_fut[jnp.asarray(order)]  # hoisted, as in the pipeline
+    variants = {
+        "seed_all_e_sync": (
+            make_ccm_chunk_fn(mesh, cfg_seed),
+            lambda rows: (jnp.asarray(rows), ts_fut, optE),
+            lambda r: r,
+            1,
+        ),
+        "bucketed_double_buffered": (
+            make_ccm_chunk_fn_bucketed(mesh, cfg_new, plan),
+            lambda rows: (jnp.asarray(rows), ts_fut_sorted),
+            lambda r: r[:, inv],
+            2,
+        ),
+    }
+    times, rhos = {}, {}
+    for name, (fn, args_of_rows, unsort, depth) in variants.items():
+        # warm the compile cache so we time steady-state phase 2
+        jax.block_until_ready(fn(*args_of_rows(_pad_rows(ts_np[:chunk], chunk))))
+        with tempfile.TemporaryDirectory() as d:
+            times[name], rhos[name] = run_loop(fn, args_of_rows, unsort, depth, d)
+        row(f"phase2_{name}", times[name], f"N={N};L={L};E_max={E_max}")
+    err = float(
+        np.abs(rhos["seed_all_e_sync"] - rhos["bucketed_double_buffered"]).max()
+    )
+    speedup = times["seed_all_e_sync"] / times["bucketed_double_buffered"]
+    row("phase2_speedup", 0.0, f"speedup={speedup:.2f}x;max_drho={err:.1e}")
+
+    out = {
+        "bench": "phase2_engine",
+        "workload": {"N": N, "L": L, "E_max": E_max},
+        "engine": engine,
+        "n_buckets": len(plan.buckets),
+        "buckets": list(plan.buckets),
+        "devices": mesh.size,
+        "seed_path": {
+            "bucketed": False, "stream_depth": 1,
+            "phase2_s": times["seed_all_e_sync"],
+        },
+        "new_path": {
+            "bucketed": True, "stream_depth": 2,
+            "phase2_s": times["bucketed_double_buffered"],
+        },
+        "speedup": speedup,
+        "max_abs_drho": err,
+    }
+    (REPO / "BENCH_phase2.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
 # ------------------------------------------------------------------ roofline
 def roofline_summary():
     d = RESULTS / "dryrun"
@@ -245,16 +349,27 @@ def roofline_summary():
         )
 
 
+BENCHES = {
+    "table2": table2_speedup,
+    "fig6": fig6_scaling_N,
+    "fig7": fig7_scaling_L,
+    "fig8": fig8_breakdown,
+    "fig9": fig9_multiE_kernel,
+    "fig9b": fig9b_knn_impl_variants,
+    "fig3": fig3_strong_scaling,
+    "phase2": phase2_engine_bench,
+    "roofline": roofline_summary,
+}
+
+
 def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown bench(es) {unknown}; available: {list(BENCHES)}")
     print("name,us_per_call,derived")
-    table2_speedup()
-    fig6_scaling_N()
-    fig7_scaling_L()
-    fig8_breakdown()
-    fig9_multiE_kernel()
-    fig9b_knn_impl_variants()
-    fig3_strong_scaling()
-    roofline_summary()
+    for name in names:
+        BENCHES[name]()
 
 
 if __name__ == "__main__":

@@ -4,21 +4,28 @@ from repro.core.embedding import delay_embed, future_values, lag_matrix
 from repro.core.knn import (
     knn_table_single_E,
     knn_tables_all_E,
+    knn_tables_bucketed,
     simplex_forecast,
     tables_with_weights,
+    tables_with_weights_bucketed,
 )
 from repro.core.simplex import simplex_batch, simplex_series
 from repro.core.ccm import (
+    BucketPlan,
     all_futures,
     ccm_block,
+    ccm_block_bucketed,
     ccm_convergence,
     ccm_library_row,
+    ccm_library_row_bucketed,
     ccm_matrix,
+    make_bucket_plan,
 )
 from repro.core.baseline import ccm_naive, ccm_pair_naive
 from repro.core.stats import pearson, simplex_weights
 
 __all__ = [
+    "BucketPlan",
     "CausalMap",
     "EDMConfig",
     "delay_embed",
@@ -26,14 +33,19 @@ __all__ = [
     "lag_matrix",
     "knn_table_single_E",
     "knn_tables_all_E",
+    "knn_tables_bucketed",
+    "make_bucket_plan",
     "simplex_forecast",
     "tables_with_weights",
+    "tables_with_weights_bucketed",
     "simplex_batch",
     "simplex_series",
     "all_futures",
     "ccm_block",
+    "ccm_block_bucketed",
     "ccm_convergence",
     "ccm_library_row",
+    "ccm_library_row_bucketed",
     "ccm_matrix",
     "ccm_naive",
     "ccm_pair_naive",

@@ -1,30 +1,89 @@
 """Phase 2 — Convergent Cross Mapping, mpEDM improved algorithm (paper Alg. 2).
 
 Key idea reproduced from the paper: the kNN table depends only on the
-*library* series, so per library series i we precompute tables for every
-E in 1..E_max once (cumulative scan, see core/knn.py) and reuse them across
-all N targets — O(N L^2 E^2 + N^2 L E) vs cppEDM's O(N^2 L^2 E).
+*library* series, so per library series i we precompute tables once and
+reuse them across all N targets — O(N L^2 E^2 + N^2 L E) vs cppEDM's
+O(N^2 L^2 E).  Two table layouts (DESIGN.md SS3):
+
+  * all-E      — tables for every E in 1..E_max (the paper's shape);
+  * bucketed   — tables only for the DISTINCT optE values present, with
+    targets grouped by bucket so every lookup batch shares one table
+    (contiguous gathers; the layout kernels/ccm_lookup is built for).
+
+Both produce the same causal map; the bucketed layout is the default in
+EDMConfig and cuts table top-k work and footprint by len(buckets)/E_max.
 
 rho[i, j] = pearson(ts_j_future, cross_map_prediction) — the skill of
 predicting series j from library i's reconstructed manifold; high skill
 means j CCM-causes i (paper SSII-B).
+
+All device compute routes through the execution engine named by
+cfg.engine (repro.engine; DESIGN.md SS5).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import engine as engines
 from repro.core import embedding, knn
 from repro.core.stats import pearson, simplex_weights
 from repro.core.types import EDMConfig
 
 
+# ---------------------------------------------------------------- bucketing
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static phase-2 grouping of targets by optimal embedding dimension.
+
+    buckets: ascending distinct E values present in optE;
+    counts[b]: number of targets whose optE == buckets[b].
+    Hashable -> usable as a static jit argument.
+    """
+
+    buckets: tuple[int, ...]
+    counts: tuple[int, ...]
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        """Start offset of each bucket's segment in the sorted target order."""
+        out, off = [], 0
+        for c in self.counts:
+            out.append(off)
+            off += c
+        return tuple(out)
+
+    @property
+    def n_targets(self) -> int:
+        return sum(self.counts)
+
+
+def make_bucket_plan(optE: np.ndarray) -> tuple[BucketPlan, np.ndarray]:
+    """Group targets by optE.
+
+    Returns (plan, order) where ``order`` (a host ndarray) permutes targets
+    into bucket-sorted layout: targets order[offsets[b]:offsets[b]+counts[b]]
+    all share embedding dimension buckets[b].  The sort is stable so
+    within-bucket target order is the original one.
+    """
+    optE = np.asarray(optE)
+    values, counts = np.unique(optE, return_counts=True)
+    plan = BucketPlan(
+        buckets=tuple(int(v) for v in values),
+        counts=tuple(int(c) for c in counts),
+    )
+    order = np.argsort(optE, kind="stable")
+    return plan, order
+
+
 def ccm_library_row(
     x: jax.Array, ts_fut: jax.Array, optE: jax.Array, cfg: EDMConfig
 ) -> jax.Array:
-    """Cross-map every target from one library series.
+    """Cross-map every target from one library series (all-E table layout).
 
     x: (L,) library series.  ts_fut: (N, Lp) future values of every target
     (precomputed once per run).  optE: (N,) optimal E per target.
@@ -33,25 +92,18 @@ def ccm_library_row(
     Targets are processed in blocks of cfg.target_block (lax.map) so the
     (block, Lp) prediction buffer stays bounded at brain scale (N ~ 1e5).
     """
+    eng = engines.get_engine(cfg.engine)
     L = x.shape[0]
     Lp = cfg.n_points(L)
     N = ts_fut.shape[0]
     V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
-    if cfg.use_kernels:
-        from repro.kernels.knn_topk.ops import knn_topk
-
-        idx, sqd = knn_topk(V, V, cfg.k_max, exclude_self=cfg.exclude_self)
-    else:
-        idx, sqd = knn.knn_tables_all_E(
-            V, V, cfg.k_max, exclude_self=cfg.exclude_self,
-            impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),
-        )
+    idx, sqd = eng.knn_tables(V, V, cfg.k_max, exclude_self=cfg.exclude_self, cfg=cfg)
     idx, w = knn.tables_with_weights(idx, sqd)
 
     def per_target(y_fut: jax.Array, e: jax.Array) -> jax.Array:
         # Cross mapping: library neighbours, *target* futures (paper line 10);
         # e is the TABLE INDEX (optE - 1).
-        pred = knn.simplex_forecast(idx[e], w[e], y_fut)
+        pred = eng.simplex_forecast(idx[e], w[e], y_fut)
         return pearson(y_fut, pred)
 
     tb = min(cfg.target_block, N)
@@ -70,12 +122,69 @@ def ccm_library_row(
     return rho[:N]
 
 
+def _rho_for_table(eng, idx, w, seg, cfg: EDMConfig) -> jax.Array:
+    """rho of every target in one bucket segment against one table.
+
+    idx/w: (Lq, k) the bucket's table; seg: (n, Lp) bucket-sorted target
+    futures.  The batched lookup makes the gather contiguous: all n targets
+    stream through the SAME index table (the kernels/ccm_lookup access
+    pattern) instead of per-target table rows.
+    """
+    n = seg.shape[0]
+    tb = min(cfg.target_block, n)
+    if n <= tb:
+        return pearson(seg, eng.ccm_lookup(idx, w, seg))
+    if n % tb != 0:  # pad to a block multiple; padded rows sliced off below
+        seg = jnp.pad(seg, ((0, tb - n % tb), (0, 0)))
+    blocks = seg.reshape(-1, tb, seg.shape[1])
+    rho = jax.lax.map(
+        lambda s: pearson(s, eng.ccm_lookup(idx, w, s)), blocks
+    ).reshape(-1)
+    return rho[:n]
+
+
+def ccm_library_row_bucketed(
+    x: jax.Array, ts_fut_sorted: jax.Array, cfg: EDMConfig, plan: BucketPlan
+) -> jax.Array:
+    """Cross-map every target from one library series, bucketed layout.
+
+    ts_fut_sorted: (N, Lp) target futures permuted into plan order (see
+    make_bucket_plan).  Returns the rho row (N,) in SORTED target order;
+    the caller owns the inverse permutation.
+    """
+    eng = engines.get_engine(cfg.engine)
+    L = x.shape[0]
+    Lp = cfg.n_points(L)
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    kb = cfg.k_override or plan.buckets[-1] + 1
+    idx, sqd = eng.knn_tables_bucketed(
+        V, V, kb, buckets=plan.buckets, exclude_self=cfg.exclude_self, cfg=cfg
+    )
+    idx, w = knn.tables_with_weights_bucketed(idx, sqd, plan.buckets)
+
+    segs = []
+    for b, (off, cnt) in enumerate(zip(plan.offsets, plan.counts)):
+        seg = jax.lax.slice_in_dim(ts_fut_sorted, off, off + cnt)
+        segs.append(_rho_for_table(eng, idx[b], w[b], seg, cfg))
+    return jnp.concatenate(segs)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def ccm_block(
     lib_block: jax.Array, ts_fut: jax.Array, optE: jax.Array, cfg: EDMConfig
 ) -> jax.Array:
     """rho rows for a block of library series: (B, L) -> (B, N)."""
     return jax.vmap(lambda x: ccm_library_row(x, ts_fut, optE, cfg))(lib_block)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"))
+def ccm_block_bucketed(
+    lib_block: jax.Array, ts_fut_sorted: jax.Array, cfg: EDMConfig, plan: BucketPlan
+) -> jax.Array:
+    """Bucketed rho rows: (B, L) -> (B, N), columns in plan-sorted order."""
+    return jax.vmap(
+        lambda x: ccm_library_row_bucketed(x, ts_fut_sorted, cfg, plan)
+    )(lib_block)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -89,9 +198,19 @@ def all_futures(ts: jax.Array, cfg: EDMConfig) -> jax.Array:
 
 
 def ccm_matrix(ts: jax.Array, optE: jax.Array, cfg: EDMConfig) -> jax.Array:
-    """Full (N, N) causal map on one device (small problems / tests)."""
+    """Full (N, N) causal map on one device (small problems / tests).
+
+    Dispatches on cfg.bucketed; both layouts return identical maps (the
+    bucket permutation is undone on the columns before returning).
+    """
     ts_fut = all_futures(ts, cfg)
-    return ccm_block(ts, ts_fut, optE, cfg)
+    if not cfg.bucketed:
+        return ccm_block(ts, ts_fut, optE, cfg)
+    plan, order = make_bucket_plan(np.asarray(optE))
+    order_j = jnp.asarray(order)
+    rho_sorted = ccm_block_bucketed(ts, ts_fut[order_j], cfg, plan)
+    inv = jnp.asarray(np.argsort(order))
+    return rho_sorted[:, inv]
 
 
 def ccm_convergence(

@@ -25,6 +25,17 @@ from repro.core.stats import simplex_weights
 
 INF = jnp.float32(jnp.inf)
 
+# Trace-time instrumentation: total (Lq, k) table rows selected by the
+# builders below, keyed by builder kind.  jit caches traces, so tests that
+# assert on these counters must use fresh shapes/configs (or call the
+# builders un-jitted); see tests/test_engine.py.
+TABLE_ROWS_BUILT = {"all_E": 0, "bucketed": 0}
+
+
+def reset_table_counters() -> None:
+    for k in TABLE_ROWS_BUILT:
+        TABLE_ROWS_BUILT[k] = 0
+
 
 def knn_tables_all_E(
     Vq: jax.Array,
@@ -55,6 +66,12 @@ def knn_tables_all_E(
     Lc = Vc.shape[1]
     if exclude_self and Lq != Lc:
         raise ValueError("exclude_self requires query set == candidate set")
+    if impl.startswith("blocked"):
+        # fall back to fully-unrolled when the block size doesn't divide E_max
+        g = int(impl.split(":")[1]) if ":" in impl else 4
+        if E_max % g != 0:
+            impl = "unroll"
+    TABLE_ROWS_BUILT["all_E"] += E_max
     self_mask = (
         jnp.eye(Lq, dtype=bool) if exclude_self else jnp.zeros((Lq, Lc), bool)
     )
@@ -92,11 +109,6 @@ def knn_tables_all_E(
         # scan over E-blocks of g unrolled steps: D-slab HBM round-trips
         # drop ~g-fold (XLA fuses within a block) while only ~g slabs stay
         # live — the peak-vs-traffic frontier knob (SSPerf HC3 #5).
-        g = int(impl.split(":")[1]) if ":" in impl else 4
-        if E_max % g != 0:  # fall back to fully-unrolled for odd E_max
-            return knn_tables_all_E(Vq, Vc, k_max, exclude_self,
-                                    impl="unroll", dist_dtype=dist_dtype)
-
         def block_step(D, vs_blk):
             vq_b, vc_b = vs_blk  # (g, Lq), (g, Lc)
             outs = []
@@ -115,6 +127,72 @@ def knn_tables_all_E(
         )
         return indices.reshape(E_max, Lq, -1), sq_dists.reshape(E_max, Lq, -1)
     _, (indices, sq_dists) = jax.lax.scan(step, D0, (Vq, Vc))
+    return indices, sq_dists
+
+
+def knn_tables_bucketed(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    buckets: tuple[int, ...],
+    impl: str = "unroll",
+    dist_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """kNN tables only for the embedding dimensions in ``buckets``.
+
+    Phase-2 CCM never reads a table row whose E is absent from optE, so
+    building just the distinct-optE bucket set (DESIGN.md SS3) cuts both
+    the top-k work and the stacked-table footprint by len(buckets)/E_max.
+    The distance accumulation still sweeps e = 1..max(buckets) (the prefix
+    recurrence needs every lag), but the O(Lq*Lc*k)-ish selection — the
+    dominant term at paper k — runs only at bucket dimensions, and lags
+    above max(buckets) are never touched.
+
+    buckets: static ascending tuple of distinct E values (1-based).
+    impl: "rebuild" builds each bucket's distances from scratch in matmul
+    form (the knn_tables_all_E "rebuild" numerics: near-ties may order
+    differently); every other value uses the unrolled cumulative
+    recurrence, whose sparse selection makes the scan/blocked sweep
+    shapings moot.  Returns (idx, sq_dists), each (len(buckets), Lq, k);
+    row b holds the table for embedding dimension buckets[b].  Cumulative
+    numerics are bit-identical to the matching rows of the cumulative
+    knn_tables_all_E variants (same termwise-sequential accumulation
+    order).
+    """
+    if not buckets or list(buckets) != sorted(set(buckets)):
+        raise ValueError(f"buckets must be ascending and distinct: {buckets}")
+    E_max, Lq = Vq.shape
+    Lc = Vc.shape[1]
+    if buckets[-1] > E_max:
+        raise ValueError(f"bucket E {buckets[-1]} exceeds lag rows {E_max}")
+    if exclude_self and Lq != Lc:
+        raise ValueError("exclude_self requires query set == candidate set")
+    TABLE_ROWS_BUILT["bucketed"] += len(buckets)
+    self_mask = (
+        jnp.eye(Lq, dtype=bool) if exclude_self else jnp.zeros((Lq, Lc), bool)
+    )
+
+    def select(D):
+        Dm = jnp.where(self_mask, INF, D.astype(jnp.float32))
+        neg_d, idx = jax.lax.top_k(-Dm, k)
+        return idx.astype(jnp.int32), -neg_d
+
+    if impl == "rebuild":
+        outs = [
+            select(_matmul_sq_dists(Vq[:E], Vc[:E]).astype(dist_dtype))
+            for E in buckets
+        ]
+    else:
+        want = set(buckets)
+        outs = []
+        D = jnp.zeros((Lq, Lc), dist_dtype)
+        for e in range(buckets[-1]):
+            D = D + jnp.square(Vq[e][:, None] - Vc[e][None, :]).astype(dist_dtype)
+            if e + 1 in want:
+                outs.append(select(D))
+    indices = jnp.stack([o[0] for o in outs])
+    sq_dists = jnp.stack([o[1] for o in outs])
     return indices, sq_dists
 
 
@@ -182,6 +260,18 @@ def tables_with_weights(
     k_valid = jnp.arange(1, E_max + 1)[:, None, None] + 1  # (E_max, 1, 1)
     w = simplex_weights(sq_dists, k_valid)
     return indices, w
+
+
+def tables_with_weights_bucketed(
+    indices: jax.Array, sq_dists: jax.Array, buckets: tuple[int, ...]
+) -> tuple[jax.Array, jax.Array]:
+    """tables_with_weights for a bucketed table stack (DESIGN.md SS3).
+
+    Row b is the table for embedding dimension buckets[b], so its valid
+    neighbour count is buckets[b] + 1 (instead of the dense row index + 2).
+    """
+    k_valid = jnp.asarray(buckets, jnp.int32)[:, None, None] + 1
+    return indices, simplex_weights(sq_dists, k_valid)
 
 
 def simplex_forecast(idx: jax.Array, w: jax.Array, fut_c: jax.Array) -> jax.Array:

@@ -6,10 +6,16 @@ as one worker axis, matching the paper's 512 flat workers):
 
   phase 1 (simplex projection): series sharded across workers, optE
     gathered to host (N int32 — the paper's single broadcast);
-  phase 2 (CCM): python loop over row CHUNKS (chunk = workers x lib_block);
-    each chunk is one jit'd shard_map call with zero internal collectives;
-    completed chunks stream to a RowBlockWriter (sequential block writes —
-    the BeeOND design point) which doubles as the RESUME manifest.
+  phase 2 (CCM): double-buffered loop over row CHUNKS (chunk = workers x
+    lib_block); each chunk is one jit'd shard_map call with zero internal
+    collectives.  With cfg.bucketed (default) targets are grouped by
+    distinct optE so each chunk builds kNN tables only for the bucket set
+    (DESIGN.md SS3).  Completed chunks stream through a ChunkStreamer
+    (runtime/stream.py): chunk i+1's host->device transfer and dispatch
+    are queued while chunk i's device->host copy and RowBlockWriter write
+    (sequential block writes — the BeeOND design point) drain, so the
+    streaming store is off the critical path.  The writer doubles as the
+    RESUME manifest.
 
 Fault tolerance: kill the process at any point; rerun resumes at the first
 uncovered row, on any mesh size (elastic — coverage is tracked per row).
@@ -31,6 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import ccm, simplex
 from repro.core.types import CausalMap, EDMConfig
 from repro.data.store import RowBlockWriter
+from repro.runtime.stream import ChunkStreamer
 
 
 def _flat(mesh) -> tuple[str, ...]:
@@ -74,6 +81,25 @@ def make_ccm_chunk_fn(mesh, cfg: EDMConfig):
     )
 
 
+def make_ccm_chunk_fn_bucketed(mesh, cfg: EDMConfig, plan: "ccm.BucketPlan"):
+    """Bucketed variant: (lib_rows sharded, ts_fut_sorted repl) -> rho rows
+    (chunk, N) sharded, columns in plan-sorted target order."""
+    axes = _flat(mesh)
+
+    def local(lib_rows, ts_fut_sorted):
+        return ccm.ccm_block_bucketed(lib_rows, ts_fut_sorted, cfg, plan)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axes, None), P(None, None)),
+            out_specs=P(axes, None),
+            check_rep=False,
+        )
+    )
+
+
 def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:
     if a.shape[0] == rows:
         return a
@@ -104,34 +130,46 @@ def run_causal_inference(
         rhos_c, optE_c = simplex_fn(jnp.asarray(rows))
         rhos_parts.append(np.asarray(rhos_c))
         optE_parts.append(np.asarray(optE_c))
-    n_valid = lambda row0: min(chunk, N - row0)
     simplex_rhos = np.concatenate(rhos_parts)[:N]
     optE = np.concatenate(optE_parts)[:N].astype(np.int32)
 
-    # ---- phase 2: all-to-all CCM with chunked resume -------------------
+    # ---- phase 2: all-to-all CCM, double-buffered chunk stream ---------
     ts_fut = np.asarray(ccm.all_futures(jnp.asarray(ts), cfg))
-    chunk_fn = make_ccm_chunk_fn(mesh, cfg)
     writer = RowBlockWriter(out_dir, N) if out_dir else None
     rho = np.zeros((N, N), np.float32)
 
-    ts_fut_j = jnp.asarray(ts_fut)
-    optE_j = jnp.asarray(optE)
-    row0 = 0
-    while row0 < N:
+    if cfg.bucketed:
+        plan, order = ccm.make_bucket_plan(optE)
+        inv = np.argsort(order)
+        chunk_fn = make_ccm_chunk_fn_bucketed(mesh, cfg, plan)
+        ts_fut_j = jnp.asarray(ts_fut[order])
+        dispatch = lambda rows: chunk_fn(jnp.asarray(rows), ts_fut_j)
+        unsort = lambda rho_rows: rho_rows[:, inv]
+    else:
+        chunk_fn = make_ccm_chunk_fn(mesh, cfg)
+        ts_fut_j = jnp.asarray(ts_fut)
+        optE_j = jnp.asarray(optE)
+        dispatch = lambda rows: chunk_fn(jnp.asarray(rows), ts_fut_j, optE_j)
+        unsort = lambda rho_rows: rho_rows
+
+    if writer is not None:
+        chunk_plan = writer.chunk_plan(chunk)
+    else:
+        chunk_plan = [(r, min(chunk, N - r)) for r in range(0, N, chunk)]
+
+    def drain(tag, rho_rows):
+        row0, valid = tag
+        rows_np = unsort(rho_rows)[:valid]
+        rho[row0 : row0 + valid] = rows_np
         if writer is not None:
-            nxt = writer.next_uncovered(row0)
-            if nxt is None:
-                break
-            row0 = nxt
-        rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
-        rho_rows = np.asarray(chunk_fn(jnp.asarray(rows), ts_fut_j, optE_j))
-        valid = min(chunk, N - row0)
-        rho[row0 : row0 + valid] = rho_rows[:valid]
-        if writer is not None:
-            writer.write_block(row0, rho_rows[:valid])
+            writer.write_block(row0, rows_np)
         if progress:
             print(f"ccm rows {row0}..{row0 + valid} / {N}")
-        row0 += valid
+
+    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+        for row0, valid in chunk_plan:
+            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
+            streamer.submit((row0, valid), dispatch(rows))
 
     if writer is not None:
         rho = writer.assemble()

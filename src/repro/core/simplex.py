@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import engine as engines
 from repro.core import embedding, knn
 from repro.core.stats import pearson
 from repro.core.types import EDMConfig
@@ -22,15 +23,16 @@ def simplex_series(x: jax.Array, cfg: EDMConfig) -> tuple[jax.Array, jax.Array]:
 
     Returns (rhos (E_max,), optE scalar int32 in [1, E_max]).
     """
+    eng = engines.get_engine(cfg.engine)
     L = x.shape[0]
     Lp = cfg.n_points(L)
     V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
     fut = embedding.future_values(x, cfg.E_max, cfg.tau, cfg.Tp, Lp)
     Lh = Lp // 2
     Vc, Vq = V[:, :Lh], V[:, Lh:]
-    idx, sqd = knn.knn_tables_all_E(Vq, Vc, cfg.k_max, exclude_self=False)
+    idx, sqd = eng.knn_tables(Vq, Vc, cfg.k_max, exclude_self=False, cfg=cfg)
     idx, w = knn.tables_with_weights(idx, sqd)
-    preds = knn.simplex_forecast(idx, w, fut[:Lh])  # (E_max, Lq)
+    preds = eng.simplex_forecast(idx, w, fut[:Lh])  # (E_max, Lq)
     rhos = pearson(jnp.broadcast_to(fut[Lh:], preds.shape), preds)
     optE = jnp.argmax(rhos).astype(jnp.int32) + 1
     return rhos, optE

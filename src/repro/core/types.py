@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 
@@ -18,8 +19,20 @@ class EDMConfig:
         target (cppEDM exclusionRadius semantics; see DESIGN.md SS4).
       lib_block: number of library series processed per device per chunk in
         the distributed CCM phase (granularity of progress checkpoints).
-      use_kernels: route kNN/lookup through the Pallas kernels (interpret
-        mode on CPU) instead of the pure-jnp reference path.
+      engine: execution-engine registry key (repro.engine) that owns kNN
+        tables, simplex forecast, and CCM lookup: "reference" (pure jnp),
+        "pallas-interpret", "pallas-compiled", or any registered backend
+        (DESIGN.md SS5).
+      bucketed: run phase-2 CCM with optE-bucketed tables — build kNN
+        tables only for the distinct optE values present and group targets
+        by bucket for contiguous lookups (DESIGN.md SS3).  Output matches
+        the all-E path; disable only for A/B benchmarks.
+      stream_depth: CCM row chunks in flight in the pipeline's streaming
+        loop.  2 = double buffering (chunk i+1 dispatched while chunk i's
+        device->host copy and row-block write drain); 1 = the fully
+        synchronous legacy behaviour.
+      use_kernels: DEPRECATED alias — True selects engine="pallas-compiled"
+        (the old kernel routing), False engine="reference".
     """
 
     E_max: int = 20
@@ -28,7 +41,10 @@ class EDMConfig:
     exclude_self: bool = True
     lib_block: int = 8
     target_block: int = 2048
-    use_kernels: bool = False
+    engine: str = "reference"
+    bucketed: bool = True
+    stream_depth: int = 2
+    use_kernels: Optional[bool] = None
     # kNN table construction variants (SSPerf hillclimb #3):
     #   rebuild    — per-E matmul-form rebuild (the PAPER-FAITHFUL shape:
     #                mpEDM recomputes each E's kNN from scratch)
@@ -44,6 +60,30 @@ class EDMConfig:
     # used by the dry-run's reduced-E cost compiles so per-E bodies carry
     # the PRODUCTION top-k cost (k tracks E_max otherwise).
     k_override: int = 0
+
+    def __post_init__(self):
+        if self.use_kernels is not None:
+            warnings.warn(
+                "EDMConfig.use_kernels is deprecated; pass "
+                "engine='pallas-compiled' (True) or engine='reference' "
+                "(False) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            want = "pallas-compiled" if self.use_kernels else "reference"
+            if self.engine not in ("reference", want):
+                raise ValueError(
+                    f"conflicting config: use_kernels={self.use_kernels} "
+                    f"implies engine={want!r} but engine={self.engine!r} "
+                    "was passed; drop use_kernels"
+                )
+            object.__setattr__(self, "engine", want)
+            # Normalize so the shimmed config equals (and shares jit cache
+            # entries with) the equivalent engine=... config, and so
+            # dataclasses.replace(cfg, engine=...) is not overridden again.
+            object.__setattr__(self, "use_kernels", None)
+        if self.stream_depth < 1:
+            raise ValueError("stream_depth must be >= 1")
 
     @property
     def k_max(self) -> int:

@@ -53,6 +53,26 @@ class RowBlockWriter:
         idx = np.nonzero(~cov[start:])[0]
         return int(idx[0]) + start if idx.size else None
 
+    def chunk_plan(self, chunk: int) -> list[tuple[int, int]]:
+        """Ordered (row0, nrows) work list for a resume at chunk granularity.
+
+        Mirrors the pipeline's elastic-resume walk: each chunk starts at the
+        first uncovered row at-or-after the previous chunk's end, and spans
+        min(chunk, N - row0) rows.  Computed up-front so the streaming loop
+        can keep multiple chunks in flight without re-reading coverage
+        (this process is the only writer; see runtime/stream.py).
+        """
+        plan: list[tuple[int, int]] = []
+        row0 = 0
+        while row0 < self.N:
+            nxt = self.next_uncovered(row0)
+            if nxt is None:
+                break
+            valid = min(chunk, self.N - nxt)
+            plan.append((nxt, valid))
+            row0 = nxt + valid
+        return plan
+
     def write_block(self, row0: int, rho_rows: np.ndarray):
         rho_rows = rho_rows[: max(0, self.N - row0)]
         np.save(self.dir / f"rows_{row0:08d}.npy", rho_rows)

@@ -1,0 +1,83 @@
+"""Execution-engine abstraction for the EDM hot path (DESIGN.md SS5).
+
+An :class:`Engine` owns the three named ops that dominate EDM runtime —
+kNN-table construction, simplex forecast, and the batched CCM lookup —
+behind one interface so the pipeline, phase-1 simplex sweep, and the
+benchmarks are backend-agnostic (the kEDM "performance portability"
+design point).  Concrete engines:
+
+  * ``reference``        — pure jnp (core/knn.py); the oracle everything
+                           else is checked against.
+  * ``pallas-interpret`` — Pallas kernels forced into interpret mode;
+                           numerics of the TPU kernels, runs anywhere.
+  * ``pallas-compiled``  — Pallas kernels compiled natively on TPU and
+                           auto-falling back to interpret mode elsewhere
+                           (the old ``use_kernels=True`` behaviour).
+
+Engines are *stateless*; ops may be called inside jit/shard_map traces
+(engine resolution happens at trace time because ``EDMConfig`` is a
+static argument).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+
+
+class Engine:
+    """Base engine: named EDM ops with reference fallbacks.
+
+    Subclasses override the ops they accelerate; anything not overridden
+    falls back to a correct (if slower) composition of the others.
+    """
+
+    #: registry key; subclasses must set this.
+    name: str = "base"
+
+    # -------------------------------------------------------------- ops
+    def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
+        """kNN tables for every embedding dimension 1..E_max.
+
+        Vq: (E_max, Lq) query lag matrix, Vc: (E_max, Lc) candidates.
+        Returns (idx, sq_dists), each (E_max, Lq, k).
+        """
+        raise NotImplementedError
+
+    def knn_tables_bucketed(self, Vq, Vc, k, *, buckets, exclude_self, cfg):
+        """kNN tables only for the embedding dimensions in ``buckets``.
+
+        buckets: static ascending tuple of distinct E values (DESIGN.md
+        SS3).  Returns (idx, sq_dists), each (len(buckets), Lq, k).
+
+        Default: build tables up to max(buckets) and gather the bucket
+        rows — already a ``max(buckets)/E_max`` truncation win (for the
+        Pallas kernels it is the whole saving available without a
+        bucket-aware kernel); the reference engine overrides this to also
+        skip the top-k at non-bucket E.
+        """
+        E_hi = buckets[-1]
+        idx, sqd = self.knn_tables(
+            Vq[:E_hi], Vc[:E_hi], k, exclude_self=exclude_self, cfg=cfg
+        )
+        rows = jnp.asarray([e - 1 for e in buckets], jnp.int32)
+        return idx[rows], sqd[rows]
+
+    def simplex_forecast(self, idx, w, fut_c):
+        """Weighted neighbour-future average (paper Alg. 5).
+
+        idx, w: (..., Lq, k); fut_c: (Lc,).  Returns (..., Lq).
+        """
+        return jnp.sum(w * fut_c[idx], axis=-1)
+
+    def ccm_lookup(self, idx, w, Y_fut):
+        """Batched simplex lookup: many targets sharing ONE library table.
+
+        idx, w: (Lq, k); Y_fut: (B, Lp).  Returns preds (B, Lq).
+        """
+        return jax.vmap(lambda y: self.simplex_forecast(idx, w, y))(Y_fut)
+
+    # ------------------------------------------------------------ misc
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<Engine {self.name}>"

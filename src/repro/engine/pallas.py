@@ -1,0 +1,46 @@
+"""Pallas-kernel engines (DESIGN.md SS5).
+
+``pallas-compiled`` compiles the kernels natively on TPU and transparently
+falls back to interpret mode elsewhere (exactly the old
+``EDMConfig.use_kernels=True`` routing); ``pallas-interpret`` pins
+interpret mode everywhere so the kernel numerics can be validated on any
+backend, including TPU hosts.
+
+Both route kNN-table construction through kernels/knn_topk and the batched
+CCM lookup through kernels/ccm_lookup (previously dead code — now the
+lookup op of every bucketed CCM phase under these engines).
+"""
+from __future__ import annotations
+
+from repro.engine.base import Engine, default_interpret
+
+
+class PallasEngine(Engine):
+    """interpret=None -> native on TPU, interpret elsewhere."""
+
+    name = "pallas-compiled"
+    interpret: bool | None = None
+
+    def _interpret(self) -> bool:
+        return default_interpret() if self.interpret is None else self.interpret
+
+    def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
+        from repro.kernels.knn_topk.ops import knn_topk
+
+        return knn_topk(
+            Vq, Vc, k, exclude_self=exclude_self, interpret=self._interpret()
+        )
+
+    # knn_tables_bucketed: the base truncate-to-max(buckets) + gather is
+    # the whole saving available without a bucket-aware kernel (in-kernel
+    # bucket masking: DESIGN.md SS3, future work).
+
+    def ccm_lookup(self, idx, w, Y_fut):
+        from repro.kernels.ccm_lookup.ops import ccm_lookup
+
+        return ccm_lookup(idx, w, Y_fut, interpret=self._interpret())
+
+
+class PallasInterpretEngine(PallasEngine):
+    name = "pallas-interpret"
+    interpret: bool | None = True

@@ -1,0 +1,31 @@
+"""Pure-jnp reference engine — the oracle path (DESIGN.md SS5).
+
+Delegates to core/knn.py: cumulative-E recurrence + lax.top_k, honouring
+the ``knn_impl`` / ``dist_dtype`` hillclimb knobs on EDMConfig.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.base import Engine
+
+
+class ReferenceEngine(Engine):
+    name = "reference"
+
+    def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
+        from repro.core import knn
+
+        return knn.knn_tables_all_E(
+            Vq, Vc, k, exclude_self=exclude_self,
+            impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),
+        )
+
+    def knn_tables_bucketed(self, Vq, Vc, k, *, buckets, exclude_self, cfg):
+        from repro.core import knn
+
+        return knn.knn_tables_bucketed(
+            Vq, Vc, k, exclude_self=exclude_self, buckets=buckets,
+            impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),
+        )

@@ -1,3 +1,14 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared helpers for the Pallas kernel wrappers."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run natively on TPU; everywhere else (CPU CI,
+    this container) they are validated in interpret mode.  One definition
+    shared by every kernels/*/ops.py wrapper and the engine layer."""
+    return jax.default_backend() != "tpu"

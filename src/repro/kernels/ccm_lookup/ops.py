@@ -5,11 +5,8 @@ import functools
 
 import jax
 
+from repro.kernels import default_interpret as _default_interpret
 from repro.kernels.ccm_lookup.ccm_lookup import ccm_lookup_pallas
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(

@@ -7,11 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret as _default_interpret
 from repro.kernels.flash_attn.flash_attn import flash_attn_pallas
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(

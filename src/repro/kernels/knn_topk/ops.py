@@ -5,13 +5,8 @@ import functools
 
 import jax
 
+from repro.kernels import default_interpret as _default_interpret
 from repro.kernels.knn_topk.knn_topk import knn_topk_pallas
-
-
-def _default_interpret() -> bool:
-    # Pallas TPU kernels run natively on TPU; everywhere else (this CPU
-    # container) they are validated in interpret mode.
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(

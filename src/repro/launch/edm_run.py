@@ -19,6 +19,7 @@ from repro.core.pipeline import run_causal_inference
 from repro.core.types import EDMConfig
 from repro.data import store
 from repro.data.synthetic import dummy_brain
+from repro.engine import available_engines
 
 
 def main():
@@ -29,7 +30,22 @@ def main():
     ap.add_argument("--e-max", type=int, default=20)
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--lib-block", type=int, default=8)
-    ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument(
+        "--engine", default=None, choices=available_engines(),
+        help="execution backend (repro.engine registry; default: reference)",
+    )
+    ap.add_argument(
+        "--no-bucketed", action="store_true",
+        help="disable optE-bucketed phase 2 (all-E tables; A/B baseline)",
+    )
+    ap.add_argument(
+        "--stream-depth", type=int, default=2,
+        help="CCM chunks in flight (2 = double buffering, 1 = synchronous)",
+    )
+    ap.add_argument(
+        "--use-kernels", action="store_true",
+        help="DEPRECATED: same as --engine pallas-compiled",
+    )
     args = ap.parse_args()
 
     if args.synthetic:
@@ -37,18 +53,34 @@ def main():
         ts = dummy_brain(N, L)
     else:
         ts = np.asarray(store.load_dataset(args.dataset), np.float32)
+    if args.use_kernels:
+        if args.engine not in (None, "pallas-compiled"):
+            ap.error("--use-kernels conflicts with --engine "
+                     f"{args.engine}; drop the deprecated flag")
+        print("note: --use-kernels is deprecated; use --engine pallas-compiled")
+        engine = "pallas-compiled"
+    else:
+        engine = args.engine or "reference"
     cfg = EDMConfig(
         E_max=args.e_max, tau=args.tau, lib_block=args.lib_block,
-        use_kernels=args.use_kernels,
+        engine=engine, bucketed=not args.no_bucketed,
+        stream_depth=args.stream_depth,
     )
     t0 = time.time()
     result = run_causal_inference(ts, cfg, out_dir=args.out, progress=True)
     dt = time.time() - t0
     N = ts.shape[0]
+    n_buckets = len(np.unique(np.asarray(result.optE)))
     print(f"causal map {N}x{N} in {dt:.1f}s "
-          f"({N * N / dt:.0f} cross-maps/s); optE mean {result.optE.mean():.2f}")
-    store.save_dataset(args.out + "/causal_map", result.rho,
-                       {"optE": result.optE.tolist()})
+          f"({N * N / dt:.0f} cross-maps/s); optE mean {result.optE.mean():.2f}; "
+          f"engine {cfg.engine}; buckets {n_buckets}/{cfg.E_max}")
+    store.save_dataset(args.out + "/causal_map", result.rho, {
+        "optE": result.optE.tolist(),
+        "engine": cfg.engine,
+        "bucketed": cfg.bucketed,
+        "n_buckets": int(n_buckets),
+        "stream_depth": cfg.stream_depth,
+    })
 
 
 if __name__ == "__main__":

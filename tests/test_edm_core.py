@@ -1,10 +1,12 @@
 """EDM core correctness: embeddings, weights, simplex, improved-vs-naive
-CCM equivalence, and causal-direction recovery on known systems."""
+CCM equivalence, and causal-direction recovery on known systems.
+
+Hypothesis property tests live in tests/test_properties.py (hypothesis is
+an optional dev dependency; see requirements-dev.txt)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     EDMConfig,
@@ -30,34 +32,12 @@ def test_lag_matrix_matches_delay_embed():
     np.testing.assert_allclose(np.asarray(V.T), np.asarray(emb)[:Lp], rtol=0, atol=0)
 
 
-@given(
-    E=st.integers(1, 6),
-    tau=st.integers(1, 3),
-    L=st.integers(40, 120),
-)
-@settings(max_examples=15, deadline=None)
-def test_embedding_point_invariant(E, tau, L):
-    """Every embedded point's coordinates are exact series values."""
-    rng = np.random.default_rng(E * 100 + tau)
-    x = rng.standard_normal(L).astype(np.float32)
-    Lp = L - (E - 1) * tau
-    emb = np.asarray(delay_embed(jnp.asarray(x), E, tau))
-    t = rng.integers(0, Lp)
-    p = t + (E - 1) * tau
-    np.testing.assert_array_equal(emb[t], x[[p - k * tau for k in range(E)]])
-
-
-# ------------------------------------------------------------------ weights
-@given(st.integers(0, 1000))
-@settings(max_examples=20, deadline=None)
-def test_simplex_weights_are_a_distribution(seed):
-    rng = np.random.default_rng(seed)
-    k = rng.integers(2, 22)
-    d = np.sort(rng.uniform(0, 10, size=(4, k)).astype(np.float32), axis=-1)
-    w = np.asarray(simplex_weights(jnp.asarray(d**2), k))
+def test_simplex_weights_basic_distribution():
+    rng = np.random.default_rng(0)
+    d = np.sort(rng.uniform(0, 10, size=(4, 8)).astype(np.float32), axis=-1)
+    w = np.asarray(simplex_weights(jnp.asarray(d**2), 8))
     assert np.all(w >= 0)
     np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-5)
-    # nearest neighbour never gets less weight than the farthest
     assert np.all(w[:, 0] + 1e-6 >= w[:, -1])
 
 
