@@ -228,30 +228,38 @@ def fig9b_knn_impl_variants():
 
 
 # ------------------------------------------------------- phase-2 engine bench
-def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference"):
-    """Phase-2 wall clock: seed path (all-E tables, synchronous drain) vs
-    optE-bucketed tables + double-buffered chunk streaming (DESIGN.md
-    SS3/SS6), through the real pipeline chunk loop including the
-    RowBlockWriter.  Records engine name and bucket count to
+def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference", tile=32):
+    """Phase-2 wall clock + host memory: seed path (all-E tables, dense
+    host map, synchronous drain) vs optE-bucketed tables + double-buffered
+    streaming (DESIGN.md SS3/SS6) vs the 2D target-tiled decomposition
+    (DESIGN.md SS7: tables once per chunk + column tiles, NO dense host
+    map), through the real pipeline loops including the TileWriter.
+    Records engine name, bucket count, tile geometry, and per-variant
+    host-allocation peaks (tracemalloc) + process peak RSS to
     BENCH_phase2.json so trajectories stay comparable across backends.
     """
+    import resource
     import tempfile
+    import tracemalloc
 
     import jax.numpy as jnp
 
-    from repro.core import make_bucket_plan
+    from repro.core import make_bucket_plan, make_tile_plans
     from repro.core.pipeline import (
         make_ccm_chunk_fn,
         make_ccm_chunk_fn_bucketed,
+        make_ccm_tables_fn_bucketed,
+        make_ccm_tile_fn_bucketed,
         _pad_rows,
     )
-    from repro.data.store import RowBlockWriter
+    from repro.data.store import TileWriter
     from repro.runtime.stream import ChunkStreamer
 
     mesh = jax.make_mesh((len(jax.devices()),), ("workers",))
     base = dict(E_max=E_max, engine=engine, lib_block=8)
     cfg_seed = EDMConfig(**base, bucketed=False, stream_depth=1)
     cfg_new = EDMConfig(**base, bucketed=True, stream_depth=2)
+    cfg_tiled = EDMConfig(**base, bucketed=True, stream_depth=2, target_tile=tile)
     chunk = mesh.size * cfg_seed.lib_block
 
     ts = jnp.asarray(dummy_brain(N, L, seed=42))
@@ -262,7 +270,8 @@ def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference"):
     ts_np = np.asarray(ts)
 
     def run_loop(chunk_fn, args_of_rows, unsort, depth, out_dir):
-        writer = RowBlockWriter(out_dir, N)
+        # seed-shaped loop: full-width row blocks into a DENSE host map
+        writer = TileWriter(out_dir, N)
         rho = np.zeros((N, N), np.float32)
 
         def drain(tag, rows_dev):
@@ -281,6 +290,36 @@ def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference"):
 
     inv = np.argsort(order)
     ts_fut_sorted = ts_fut[jnp.asarray(order)]  # hoisted, as in the pipeline
+    ts_fut_sorted_np = np.asarray(ts_fut_sorted)
+    tile_plans = make_tile_plans(plan, tile)
+    tables_fn = make_ccm_tables_fn_bucketed(mesh, cfg_tiled, plan)
+    tile_fn_for = make_ccm_tile_fn_bucketed(mesh, cfg_tiled)
+
+    def run_loop_tiled(out_dir):
+        # DESIGN SS7 loop: tables once per chunk, targets in column tiles,
+        # blocks stream to the TileWriter — no dense (N, N) host array;
+        # the map is assembled into a memmap afterwards (counted in time).
+        writer = TileWriter(out_dir, N)
+        writer.ensure_col_order(order)
+
+        def drain(tag, block):
+            row0, col0, valid = tag
+            writer.write_tile(row0, col0, block[:valid])
+
+        t0 = time.perf_counter()
+        with ChunkStreamer(drain, depth=cfg_tiled.stream_depth) as s:
+            for row0 in range(0, N, chunk):
+                valid = min(chunk, N - row0)
+                rows = _pad_rows(ts_np[row0 : row0 + chunk], chunk)
+                idx, w = tables_fn(jnp.asarray(rows))
+                for c0, seg_plan in tile_plans:
+                    fut_tile = jnp.asarray(ts_fut_sorted_np[c0 : c0 + tile])
+                    s.submit(
+                        (row0, c0, valid), tile_fn_for(seg_plan)(idx, w, fut_tile)
+                    )
+        rho = writer.assemble(mmap_path=writer.dir / "causal_map" / "data.npy")
+        return time.perf_counter() - t0, rho  # rho is a disk-backed memmap
+
     variants = {
         "seed_all_e_sync": (
             make_ccm_chunk_fn(mesh, cfg_seed),
@@ -295,18 +334,55 @@ def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference"):
             2,
         ),
     }
-    times, rhos = {}, {}
+    times, rhos, host_peaks = {}, {}, {}
     for name, (fn, args_of_rows, unsort, depth) in variants.items():
         # warm the compile cache so we time steady-state phase 2
         jax.block_until_ready(fn(*args_of_rows(_pad_rows(ts_np[:chunk], chunk))))
+        tracemalloc.start()
         with tempfile.TemporaryDirectory() as d:
             times[name], rhos[name] = run_loop(fn, args_of_rows, unsort, depth, d)
+        host_peaks[name] = tracemalloc.get_traced_memory()[1]
+        tracemalloc.stop()
         row(f"phase2_{name}", times[name], f"N={N};L={L};E_max={E_max}")
+
+    # warm the tiled fns (tables + every distinct tile signature)
+    idx_w, w_w = tables_fn(jnp.asarray(_pad_rows(ts_np[:chunk], chunk)))
+    for c0, seg_plan in tile_plans:
+        jax.block_until_ready(
+            tile_fn_for(seg_plan)(
+                idx_w, w_w, jnp.asarray(ts_fut_sorted_np[c0 : c0 + tile])
+            )
+        )
+    tracemalloc.start()
+    with tempfile.TemporaryDirectory() as d:
+        times["bucketed_tiled"], rho_mm = run_loop_tiled(d)
+        # peak captured BEFORE the dense comparison copy below — the copy
+        # exists only so err_tiled can be computed after the tempdir (and
+        # the memmap's backing file) are gone; it is not part of the
+        # tiled path's own memory profile
+        host_peaks["bucketed_tiled"] = tracemalloc.get_traced_memory()[1]
+        tracemalloc.stop()
+        rhos["bucketed_tiled"] = np.array(rho_mm)
+    row(
+        "phase2_bucketed_tiled", times["bucketed_tiled"],
+        f"N={N};L={L};tile={tile};n_col_tiles={len(tile_plans)}",
+    )
+
     err = float(
         np.abs(rhos["seed_all_e_sync"] - rhos["bucketed_double_buffered"]).max()
     )
+    err_tiled = float(
+        np.abs(rhos["bucketed_double_buffered"] - rhos["bucketed_tiled"]).max()
+    )
     speedup = times["seed_all_e_sync"] / times["bucketed_double_buffered"]
+    ru_maxrss_kb = int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
     row("phase2_speedup", 0.0, f"speedup={speedup:.2f}x;max_drho={err:.1e}")
+    row(
+        "phase2_tiled_host_peak", 0.0,
+        f"host_peak_MiB={host_peaks['bucketed_tiled'] / 2**20:.1f};"
+        f"dense_MiB={host_peaks['seed_all_e_sync'] / 2**20:.1f};"
+        f"tiled_drho={err_tiled:.1e}",
+    )
 
     out = {
         "bench": "phase2_engine",
@@ -315,16 +391,31 @@ def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference"):
         "n_buckets": len(plan.buckets),
         "buckets": list(plan.buckets),
         "devices": mesh.size,
+        "tile": {
+            "target_tile": tile,
+            "n_col_tiles": len(tile_plans),
+            "n_tile_signatures": len({sp for _, sp in tile_plans}),
+            "chunk_rows": chunk,
+        },
         "seed_path": {
             "bucketed": False, "stream_depth": 1,
             "phase2_s": times["seed_all_e_sync"],
+            "host_peak_bytes": host_peaks["seed_all_e_sync"],
         },
         "new_path": {
             "bucketed": True, "stream_depth": 2,
             "phase2_s": times["bucketed_double_buffered"],
+            "host_peak_bytes": host_peaks["bucketed_double_buffered"],
         },
+        "tiled_path": {
+            "bucketed": True, "stream_depth": 2, "target_tile": tile,
+            "phase2_s": times["bucketed_tiled"],
+            "host_peak_bytes": host_peaks["bucketed_tiled"],
+        },
+        "ru_maxrss_kb": ru_maxrss_kb,
         "speedup": speedup,
         "max_abs_drho": err,
+        "max_abs_drho_tiled": err_tiled,
     }
     (REPO / "BENCH_phase2.json").write_text(json.dumps(out, indent=2))
     return out

@@ -17,6 +17,16 @@ rho[i, j] = pearson(ts_j_future, cross_map_prediction) — the skill of
 predicting series j from library i's reconstructed manifold; high skill
 means j CCM-causes i (paper SSII-B).
 
+Phase 2 is additionally TILEABLE along the target (column) axis
+(DESIGN.md SS7): table construction (`ccm_row_tables*` / the
+`ccm_block_tables*` wrappers) is split from the lookup
+(`ccm_row_lookup*` / `ccm_block_tile*`) so one kNN table set per
+library chunk is reused across every column tile — tables depend only
+on the library series, so tiling never rebuilds them — and only the
+live (tile, Lp) slice of the target futures needs to be resident.
+`cfg.target_tile = 0` keeps the single-tile path; both produce
+bit-identical causal maps.
+
 All device compute routes through the execution engine named by
 cfg.engine (repro.engine; DESIGN.md SS5).
 """
@@ -80,36 +90,85 @@ def make_bucket_plan(optE: np.ndarray) -> tuple[BucketPlan, np.ndarray]:
     return plan, order
 
 
-def ccm_library_row(
-    x: jax.Array, ts_fut: jax.Array, optE: jax.Array, cfg: EDMConfig
+def _check_k(k: int, Lp: int, cfg: EDMConfig, where: str) -> None:
+    """Fail with a diagnosable message instead of crashing inside lax.top_k
+    when the requested neighbour-table width exceeds the library points."""
+    if k < 1:
+        raise ValueError(f"{where}: neighbour count k={k} must be >= 1")
+    if k > Lp:
+        raise ValueError(
+            f"{where}: k={k} neighbours requested but only Lp={Lp} library "
+            f"points are embeddable (series too short for E_max={cfg.E_max}, "
+            f"tau={cfg.tau}, Tp={cfg.Tp}; shrink E_max/k_override or use a "
+            "longer series)"
+        )
+
+
+def _bucket_k(cfg: EDMConfig, plan: BucketPlan) -> int:
+    """Neighbour-table width for the bucketed layout.
+
+    ``k_override`` is honoured when SET (None = unset; 0 is rejected by
+    EDMConfig) — the old ``cfg.k_override or ...`` idiom silently dropped
+    an explicit 0 into the default path.
+    """
+    return plan.buckets[-1] + 1 if cfg.k_override is None else cfg.k_override
+
+
+def ccm_row_tables(x: jax.Array, cfg: EDMConfig) -> tuple[jax.Array, jax.Array]:
+    """kNN tables + simplex weights for ONE library series, all-E layout.
+
+    x: (L,).  Returns (idx, w), each (E_max, Lp, k_max).  Tables depend
+    only on the library series, so callers reuse them across every target
+    tile of a chunk (DESIGN.md SS7).
+    """
+    eng = engines.get_engine(cfg.engine)
+    Lp = cfg.n_points(x.shape[0])
+    _check_k(cfg.k_max, Lp, cfg, "ccm_row_tables")
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    idx, sqd = eng.knn_tables(V, V, cfg.k_max, exclude_self=cfg.exclude_self, cfg=cfg)
+    return knn.tables_with_weights(idx, sqd)
+
+
+def ccm_row_tables_bucketed(
+    x: jax.Array, cfg: EDMConfig, plan: BucketPlan
+) -> tuple[jax.Array, jax.Array]:
+    """kNN tables + weights for ONE library series, bucketed layout.
+
+    Returns (idx, w), each (len(plan.buckets), Lp, k).
+    """
+    eng = engines.get_engine(cfg.engine)
+    Lp = cfg.n_points(x.shape[0])
+    kb = _bucket_k(cfg, plan)
+    _check_k(kb, Lp, cfg, "ccm_row_tables_bucketed")
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    idx, sqd = eng.knn_tables_bucketed(
+        V, V, kb, buckets=plan.buckets, exclude_self=cfg.exclude_self, cfg=cfg
+    )
+    return knn.tables_with_weights_bucketed(idx, sqd, plan.buckets)
+
+
+def ccm_row_lookup(
+    idx: jax.Array, w: jax.Array, ts_fut: jax.Array, e_idx: jax.Array,
+    cfg: EDMConfig,
 ) -> jax.Array:
-    """Cross-map every target from one library series (all-E table layout).
+    """rho of a batch of targets against one library's all-E tables.
 
-    x: (L,) library series.  ts_fut: (N, Lp) future values of every target
-    (precomputed once per run).  optE: (N,) optimal E per target.
-    Returns rho row (N,).
-
+    idx/w: (E_max, Lp, k) tables from :func:`ccm_row_tables`; ts_fut:
+    (n, Lp) target futures; e_idx: (n,) TABLE INDEX per target (optE - 1).
     Targets are processed in blocks of cfg.target_block (lax.map) so the
     (block, Lp) prediction buffer stays bounded at brain scale (N ~ 1e5).
     """
     eng = engines.get_engine(cfg.engine)
-    L = x.shape[0]
-    Lp = cfg.n_points(L)
-    N = ts_fut.shape[0]
-    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
-    idx, sqd = eng.knn_tables(V, V, cfg.k_max, exclude_self=cfg.exclude_self, cfg=cfg)
-    idx, w = knn.tables_with_weights(idx, sqd)
+    n = ts_fut.shape[0]
 
     def per_target(y_fut: jax.Array, e: jax.Array) -> jax.Array:
-        # Cross mapping: library neighbours, *target* futures (paper line 10);
-        # e is the TABLE INDEX (optE - 1).
+        # Cross mapping: library neighbours, *target* futures (paper line 10).
         pred = eng.simplex_forecast(idx[e], w[e], y_fut)
         return pearson(y_fut, pred)
 
-    tb = min(cfg.target_block, N)
-    e_idx = optE - 1  # table row for embedding dimension E
-    if N % tb != 0:  # pad targets to a block multiple
-        pad = tb - N % tb
+    tb = min(cfg.target_block, n)
+    if n % tb != 0:  # pad targets to a block multiple
+        pad = tb - n % tb
         ts_fut = jnp.pad(ts_fut, ((0, pad), (0, 0)))
         e_idx = jnp.pad(e_idx, (0, pad))
     blocks = (
@@ -119,7 +178,20 @@ def ccm_library_row(
     rho = jax.lax.map(
         lambda be: jax.vmap(per_target)(be[0], be[1]), blocks
     ).reshape(-1)
-    return rho[:N]
+    return rho[:n]
+
+
+def ccm_library_row(
+    x: jax.Array, ts_fut: jax.Array, optE: jax.Array, cfg: EDMConfig
+) -> jax.Array:
+    """Cross-map every target from one library series (all-E table layout).
+
+    x: (L,) library series.  ts_fut: (N, Lp) future values of every target
+    (precomputed once per run).  optE: (N,) optimal E per target.
+    Returns rho row (N,).
+    """
+    idx, w = ccm_row_tables(x, cfg)
+    return ccm_row_lookup(idx, w, ts_fut, optE - 1, cfg)
 
 
 def _rho_for_table(eng, idx, w, seg, cfg: EDMConfig) -> jax.Array:
@@ -143,6 +215,33 @@ def _rho_for_table(eng, idx, w, seg, cfg: EDMConfig) -> jax.Array:
     return rho[:n]
 
 
+def ccm_row_lookup_bucketed(
+    idx: jax.Array, w: jax.Array, fut_tile: jax.Array, cfg: EDMConfig,
+    seg_plan: tuple[tuple[int, int], ...],
+) -> jax.Array:
+    """rho of one bucket-sorted target tile against one library's tables.
+
+    idx/w: (len(buckets), Lp, k) tables from :func:`ccm_row_tables_bucketed`;
+    fut_tile: (t, Lp) a contiguous slice of the bucket-sorted target
+    futures; seg_plan: static ((table_row, count), ...) describing how the
+    tile decomposes into bucket segments (counts sum to t).  Each segment
+    streams through its ONE shared table via the batched ccm_lookup — the
+    contiguous access pattern the kernels are built for — exactly as in
+    the untiled path, so tiled and untiled rho are bit-identical.
+    """
+    eng = engines.get_engine(cfg.engine)
+    segs, off = [], 0
+    for b, cnt in seg_plan:
+        seg = jax.lax.slice_in_dim(fut_tile, off, off + cnt)
+        segs.append(_rho_for_table(eng, idx[b], w[b], seg, cfg))
+        off += cnt
+    if fut_tile.shape[0] != off:
+        raise ValueError(
+            f"seg_plan covers {off} targets but tile has {fut_tile.shape[0]}"
+        )
+    return segs[0] if len(segs) == 1 else jnp.concatenate(segs)
+
+
 def ccm_library_row_bucketed(
     x: jax.Array, ts_fut_sorted: jax.Array, cfg: EDMConfig, plan: BucketPlan
 ) -> jax.Array:
@@ -152,21 +251,37 @@ def ccm_library_row_bucketed(
     make_bucket_plan).  Returns the rho row (N,) in SORTED target order;
     the caller owns the inverse permutation.
     """
-    eng = engines.get_engine(cfg.engine)
-    L = x.shape[0]
-    Lp = cfg.n_points(L)
-    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
-    kb = cfg.k_override or plan.buckets[-1] + 1
-    idx, sqd = eng.knn_tables_bucketed(
-        V, V, kb, buckets=plan.buckets, exclude_self=cfg.exclude_self, cfg=cfg
-    )
-    idx, w = knn.tables_with_weights_bucketed(idx, sqd, plan.buckets)
+    idx, w = ccm_row_tables_bucketed(x, cfg, plan)
+    seg_plan = tuple(enumerate(plan.counts))
+    return ccm_row_lookup_bucketed(idx, w, ts_fut_sorted, cfg, seg_plan)
 
-    segs = []
-    for b, (off, cnt) in enumerate(zip(plan.offsets, plan.counts)):
-        seg = jax.lax.slice_in_dim(ts_fut_sorted, off, off + cnt)
-        segs.append(_rho_for_table(eng, idx[b], w[b], seg, cfg))
-    return jnp.concatenate(segs)
+
+def make_tile_plans(
+    plan: BucketPlan, tile: int
+) -> list[tuple[int, tuple[tuple[int, int], ...]]]:
+    """Static column-tile decomposition of the bucket-sorted target axis.
+
+    Returns [(col0, seg_plan), ...] covering sorted columns [0, N) in
+    tiles of ``tile`` (the last may be short); seg_plan is the
+    ((table_row, count), ...) intersection of the tile with the bucket
+    segments, consumable by :func:`ccm_row_lookup_bucketed`.  Distinct
+    seg_plan values are few — interior tiles of a bucket share one — so
+    jit recompilation stays bounded at ~2 x len(buckets) regardless of
+    the number of tiles.
+    """
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1, got {tile}")
+    N = plan.n_targets
+    plans: list[tuple[int, tuple[tuple[int, int], ...]]] = []
+    for c0 in range(0, N, tile):
+        c1 = min(c0 + tile, N)
+        segs = []
+        for b, (off, cnt) in enumerate(zip(plan.offsets, plan.counts)):
+            lo, hi = max(off, c0), min(off + cnt, c1)
+            if hi > lo:
+                segs.append((b, hi - lo))
+        plans.append((c0, tuple(segs)))
+    return plans
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -187,6 +302,54 @@ def ccm_block_bucketed(
     )(lib_block)
 
 
+# ------------------------------------------------- tiled phase 2 (DESIGN SS7)
+def _block_tables(lib_block: jax.Array, cfg: EDMConfig):
+    return jax.vmap(lambda x: ccm_row_tables(x, cfg))(lib_block)
+
+
+def _block_tables_bucketed(lib_block: jax.Array, cfg: EDMConfig, plan: BucketPlan):
+    return jax.vmap(lambda x: ccm_row_tables_bucketed(x, cfg, plan))(lib_block)
+
+
+def _block_tile(idx, w, fut_tile, e_idx, cfg: EDMConfig):
+    return jax.vmap(lambda i, ww: ccm_row_lookup(i, ww, fut_tile, e_idx, cfg))(idx, w)
+
+
+def _block_tile_bucketed(idx, w, fut_tile, cfg: EDMConfig, seg_plan):
+    return jax.vmap(
+        lambda i, ww: ccm_row_lookup_bucketed(i, ww, fut_tile, cfg, seg_plan)
+    )(idx, w)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ccm_block_tables(lib_block: jax.Array, cfg: EDMConfig):
+    """All-E tables for a block of library series: (B, L) ->
+    (idx, w) each (B, E_max, Lp, k).  Built ONCE per row chunk and reused
+    by every :func:`ccm_block_tile` call of that chunk."""
+    return _block_tables(lib_block, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "plan"))
+def ccm_block_tables_bucketed(lib_block: jax.Array, cfg: EDMConfig, plan: BucketPlan):
+    """Bucketed tables for a block: (B, L) -> (idx, w) each
+    (B, len(buckets), Lp, k)."""
+    return _block_tables_bucketed(lib_block, cfg, plan)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ccm_block_tile(idx, w, fut_tile, e_idx, cfg: EDMConfig):
+    """One (row-chunk x col-tile) rho block, all-E layout: tables (B, ...)
+    + fut_tile (t, Lp) + e_idx (t,) -> rho (B, t)."""
+    return _block_tile(idx, w, fut_tile, e_idx, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "seg_plan"))
+def ccm_block_tile_bucketed(idx, w, fut_tile, cfg: EDMConfig, seg_plan):
+    """One (row-chunk x col-tile) rho block, bucketed layout; columns in
+    plan-sorted order, seg_plan from :func:`make_tile_plans`."""
+    return _block_tile_bucketed(idx, w, fut_tile, cfg, seg_plan)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def all_futures(ts: jax.Array, cfg: EDMConfig) -> jax.Array:
     """(N, L) -> (N, Lp) future-value arrays used as cross-map targets."""
@@ -200,15 +363,54 @@ def all_futures(ts: jax.Array, cfg: EDMConfig) -> jax.Array:
 def ccm_matrix(ts: jax.Array, optE: jax.Array, cfg: EDMConfig) -> jax.Array:
     """Full (N, N) causal map on one device (small problems / tests).
 
-    Dispatches on cfg.bucketed; both layouts return identical maps (the
-    bucket permutation is undone on the columns before returning).
+    Dispatches on cfg.bucketed and cfg.target_tile; every combination
+    returns an identical map (the bucket permutation is undone on the
+    columns before returning, tiles are reassembled in column order).
     """
     ts_fut = all_futures(ts, cfg)
+    if cfg.target_tile:
+        return _ccm_matrix_tiled(ts, ts_fut, optE, cfg)
     if not cfg.bucketed:
         return ccm_block(ts, ts_fut, optE, cfg)
     plan, order = make_bucket_plan(np.asarray(optE))
     order_j = jnp.asarray(order)
     rho_sorted = ccm_block_bucketed(ts, ts_fut[order_j], cfg, plan)
+    inv = jnp.asarray(np.argsort(order))
+    return rho_sorted[:, inv]
+
+
+def _ccm_matrix_tiled(
+    ts: jax.Array, ts_fut: jax.Array, optE: jax.Array, cfg: EDMConfig
+) -> jax.Array:
+    """Single-device tiled phase 2: tables once, targets in column tiles."""
+    N = ts.shape[0]
+    T = cfg.target_tile
+    optE_np = np.asarray(optE)
+    if not cfg.bucketed:
+        idx, w = ccm_block_tables(ts, cfg)
+        e_idx = jnp.asarray(optE_np.astype(np.int32) - 1)
+        cols = [
+            ccm_block_tile(
+                idx, w,
+                jax.lax.slice_in_dim(ts_fut, c0, min(c0 + T, N)),
+                jax.lax.slice_in_dim(e_idx, c0, min(c0 + T, N)),
+                cfg,
+            )
+            for c0 in range(0, N, T)
+        ]
+        return jnp.concatenate(cols, axis=1)
+    plan, order = make_bucket_plan(optE_np)
+    idx, w = ccm_block_tables_bucketed(ts, cfg, plan)
+    ts_fut_sorted = ts_fut[jnp.asarray(order)]
+    cols = [
+        ccm_block_tile_bucketed(
+            idx, w,
+            jax.lax.slice_in_dim(ts_fut_sorted, c0, min(c0 + T, N)),
+            cfg, seg_plan,
+        )
+        for c0, seg_plan in make_tile_plans(plan, T)
+    ]
+    rho_sorted = jnp.concatenate(cols, axis=1)
     inv = jnp.asarray(np.argsort(order))
     return rho_sorted[:, inv]
 

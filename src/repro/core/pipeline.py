@@ -7,15 +7,23 @@ as one worker axis, matching the paper's 512 flat workers):
   phase 1 (simplex projection): series sharded across workers, optE
     gathered to host (N int32 — the paper's single broadcast);
   phase 2 (CCM): double-buffered loop over row CHUNKS (chunk = workers x
-    lib_block); each chunk is one jit'd shard_map call with zero internal
-    collectives.  With cfg.bucketed (default) targets are grouped by
-    distinct optE so each chunk builds kNN tables only for the bucket set
-    (DESIGN.md SS3).  Completed chunks stream through a ChunkStreamer
-    (runtime/stream.py): chunk i+1's host->device transfer and dispatch
-    are queued while chunk i's device->host copy and RowBlockWriter write
-    (sequential block writes — the BeeOND design point) drain, so the
-    streaming store is off the critical path.  The writer doubles as the
-    RESUME manifest.
+    lib_block); each chunk is one or more jit'd shard_map calls with zero
+    internal collectives.  With cfg.bucketed (default) targets are
+    grouped by distinct optE so each chunk builds kNN tables only for
+    the bucket set (DESIGN.md SS3).  With cfg.target_tile > 0 phase 2
+    gains a SECOND tiling dimension (DESIGN.md SS7): kNN tables are
+    built once per chunk (they depend only on the library rows) and the
+    targets stream through in column tiles — only the live (tile, Lp)
+    slice of ts_fut is resident per device, killing the full (N, Lp)
+    replication, and rho is emitted as (row-chunk x col-tile) blocks.
+    Completed blocks stream through a ChunkStreamer (runtime/stream.py):
+    the next dispatch is queued while older blocks' device->host copies
+    and TileWriter writes (sequential block writes — the BeeOND design
+    point) drain, so the streaming store is off the critical path.  The
+    writer doubles as the RESUME manifest; when it is active no dense
+    (N, N) host array is ever allocated — the causal map is assembled
+    into a memmap, so phase 2's own host working set is O(chunk x tile)
+    on top of the O(N x L) inputs (ts, ts_fut) it reads.
 
 Fault tolerance: kill the process at any point; rerun resumes at the first
 uncovered row, on any mesh size (elastic — coverage is tracked per row).
@@ -36,7 +44,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ccm, simplex
 from repro.core.types import CausalMap, EDMConfig
-from repro.data.store import RowBlockWriter
+from repro.data.store import TileWriter
 from repro.runtime.stream import ChunkStreamer
 
 
@@ -100,11 +108,186 @@ def make_ccm_chunk_fn_bucketed(mesh, cfg: EDMConfig, plan: "ccm.BucketPlan"):
     )
 
 
+# --------------------------------------------- tiled phase 2 (DESIGN.md SS7)
+def make_ccm_tables_fn(mesh, cfg: EDMConfig):
+    """(chunk, L) sharded -> (idx, w) tables sharded on rows, all-E layout.
+    Called once per row chunk; the tables stay on device and feed every
+    column tile of that chunk."""
+    axes = _flat(mesh)
+    tspec = P(axes, None, None, None)
+    return jax.jit(
+        shard_map(
+            lambda rows: ccm._block_tables(rows, cfg),
+            mesh=mesh,
+            in_specs=(P(axes, None),),
+            out_specs=(tspec, tspec),
+            check_rep=False,
+        )
+    )
+
+
+def make_ccm_tables_fn_bucketed(mesh, cfg: EDMConfig, plan: "ccm.BucketPlan"):
+    """Bucketed tables variant: (chunk, L) sharded -> (idx, w) sharded."""
+    axes = _flat(mesh)
+    tspec = P(axes, None, None, None)
+    return jax.jit(
+        shard_map(
+            lambda rows: ccm._block_tables_bucketed(rows, cfg, plan),
+            mesh=mesh,
+            in_specs=(P(axes, None),),
+            out_specs=(tspec, tspec),
+            check_rep=False,
+        )
+    )
+
+
+def make_ccm_tile_fn(mesh, cfg: EDMConfig):
+    """(idx, w sharded; fut_tile (t, Lp) repl; e_idx (t,) repl) -> rho
+    (chunk, t) sharded.  Only the LIVE tile is replicated — O(tile x Lp)
+    per device instead of the old O(N x Lp) ts_fut replication."""
+    axes = _flat(mesh)
+    tspec = P(axes, None, None, None)
+
+    def local(idx, w, fut_tile, e_idx):
+        return ccm._block_tile(idx, w, fut_tile, e_idx, cfg)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(tspec, tspec, P(None, None), P(None)),
+            out_specs=P(axes, None),
+            check_rep=False,
+        )
+    )
+
+
+def make_ccm_tile_fn_bucketed(mesh, cfg: EDMConfig):
+    """Returns seg_plan -> tile fn (memoized: distinct seg_plans are few —
+    interior tiles of a bucket share one; see ccm.make_tile_plans)."""
+    axes = _flat(mesh)
+    tspec = P(axes, None, None, None)
+
+    @functools.lru_cache(maxsize=None)
+    def for_plan(seg_plan):
+        def local(idx, w, fut_tile):
+            return ccm._block_tile_bucketed(idx, w, fut_tile, cfg, seg_plan)
+
+        return jax.jit(
+            shard_map(
+                local,
+                mesh=mesh,
+                in_specs=(tspec, tspec, P(None, None)),
+                out_specs=P(axes, None),
+                check_rep=False,
+            )
+        )
+
+    return for_plan
+
+
 def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:
     if a.shape[0] == rows:
         return a
     pad = np.zeros((rows - a.shape[0],) + a.shape[1:], a.dtype)
     return np.concatenate([a, pad], axis=0)
+
+
+def _phase2_untiled(
+    ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress
+):
+    """Legacy single-tile phase 2: full-width (chunk, N) row blocks."""
+    N = ts.shape[0]
+    if cfg.bucketed:
+        plan, order = ccm.make_bucket_plan(optE)
+        inv = np.argsort(order)
+        chunk_fn = make_ccm_chunk_fn_bucketed(mesh, cfg, plan)
+        ts_fut_j = jnp.asarray(ts_fut[order])
+        dispatch = lambda rows: chunk_fn(jnp.asarray(rows), ts_fut_j)
+        unsort = lambda rho_rows: rho_rows[:, inv]
+    else:
+        chunk_fn = make_ccm_chunk_fn(mesh, cfg)
+        ts_fut_j = jnp.asarray(ts_fut)
+        optE_j = jnp.asarray(optE)
+        dispatch = lambda rows: chunk_fn(jnp.asarray(rows), ts_fut_j, optE_j)
+        unsort = lambda rho_rows: rho_rows
+
+    def drain(tag, rho_rows):
+        row0, valid = tag
+        rows_np = unsort(rho_rows)[:valid]
+        if writer is not None:
+            writer.write_block(row0, rows_np)
+        else:
+            rho[row0 : row0 + valid] = rows_np
+        if progress:
+            print(f"ccm rows {row0}..{row0 + valid} / {N}")
+
+    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+        for row0, valid in chunk_plan:
+            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
+            streamer.submit((row0, valid), dispatch(rows))
+
+
+def _phase2_tiled(
+    ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress
+):
+    """2D (row-chunk x col-tile) phase 2: tables once per chunk, targets in
+    column tiles of cfg.target_tile, blocks streamed with
+    (row0, col0, valid) tags."""
+    N = ts.shape[0]
+    T = cfg.target_tile
+    if cfg.bucketed:
+        plan, order = ccm.make_bucket_plan(optE)
+        tables_fn = make_ccm_tables_fn_bucketed(mesh, cfg, plan)
+        tile_fn_for = make_ccm_tile_fn_bucketed(mesh, cfg)
+        tile_plans = ccm.make_tile_plans(plan, T)
+        if writer is not None:
+            writer.ensure_col_order(order)
+    else:
+        order = None
+        tables_fn = make_ccm_tables_fn(mesh, cfg)
+        tile_fn = make_ccm_tile_fn(mesh, cfg)
+        tile_plans = [(c0, None) for c0 in range(0, N, T)]
+        e_idx_host = optE.astype(np.int32) - 1
+        if writer is not None:
+            writer.ensure_col_order(None)
+
+    def drain(tag, block):
+        row0, col0, valid = tag
+        blk = block[:valid]
+        last_tile = col0 + blk.shape[1] >= N
+        if writer is not None:
+            # On-disk (col_order) layout.  The manifest commit is batched
+            # to once per row chunk (drains are ordered, so when the last
+            # tile lands every earlier tile of the chunk is durable).
+            writer.write_tile(row0, col0, blk, commit=last_tile)
+        elif order is not None:
+            rho[row0 : row0 + valid][:, order[col0 : col0 + blk.shape[1]]] = blk
+        else:
+            rho[row0 : row0 + valid, col0 : col0 + blk.shape[1]] = blk
+        if progress and last_tile:
+            print(f"ccm rows {row0}..{row0 + valid} / {N} (tiles of {T})")
+
+    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+        for row0, valid in chunk_plan:
+            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
+            idx, w = tables_fn(jnp.asarray(rows))  # once per chunk
+            for c0, seg_plan in tile_plans:
+                c1 = min(c0 + T, N)
+                # per-tile slice only — a gather through `order` in the
+                # bucketed layout, so NO second (N, Lp) sorted host copy
+                fut_tile = jnp.asarray(
+                    ts_fut[order[c0:c1]] if order is not None else ts_fut[c0:c1]
+                )
+                if seg_plan is not None:
+                    block = tile_fn_for(seg_plan)(idx, w, fut_tile)
+                else:
+                    block = tile_fn(
+                        idx, w, fut_tile, jnp.asarray(e_idx_host[c0:c1])
+                    )
+                streamer.submit((row0, c0, valid), block)
+    if writer is not None:
+        writer.commit()  # defensive: deferred entries are never left behind
 
 
 def run_causal_inference(
@@ -114,7 +297,13 @@ def run_causal_inference(
     out_dir: Optional[str] = None,
     progress: bool = False,
 ) -> CausalMap:
-    """Full pipeline on the given mesh (defaults to all local devices)."""
+    """Full pipeline on the given mesh (defaults to all local devices).
+
+    With ``out_dir`` set, phase-2 blocks stream to a :class:`TileWriter`
+    and the returned causal map is a disk-backed memmap
+    (<out_dir>/causal_map/data.npy) — no dense (N, N) host array is
+    allocated at any point.
+    """
     if mesh is None:
         n = len(jax.devices())
         mesh = jax.make_mesh((n,), ("workers",))
@@ -133,44 +322,23 @@ def run_causal_inference(
     simplex_rhos = np.concatenate(rhos_parts)[:N]
     optE = np.concatenate(optE_parts)[:N].astype(np.int32)
 
-    # ---- phase 2: all-to-all CCM, double-buffered chunk stream ---------
+    # ---- phase 2: all-to-all CCM, streamed (row-chunk x col-tile) ------
     ts_fut = np.asarray(ccm.all_futures(jnp.asarray(ts), cfg))
-    writer = RowBlockWriter(out_dir, N) if out_dir else None
-    rho = np.zeros((N, N), np.float32)
-
-    if cfg.bucketed:
-        plan, order = ccm.make_bucket_plan(optE)
-        inv = np.argsort(order)
-        chunk_fn = make_ccm_chunk_fn_bucketed(mesh, cfg, plan)
-        ts_fut_j = jnp.asarray(ts_fut[order])
-        dispatch = lambda rows: chunk_fn(jnp.asarray(rows), ts_fut_j)
-        unsort = lambda rho_rows: rho_rows[:, inv]
-    else:
-        chunk_fn = make_ccm_chunk_fn(mesh, cfg)
-        ts_fut_j = jnp.asarray(ts_fut)
-        optE_j = jnp.asarray(optE)
-        dispatch = lambda rows: chunk_fn(jnp.asarray(rows), ts_fut_j, optE_j)
-        unsort = lambda rho_rows: rho_rows
+    writer = TileWriter(out_dir, N) if out_dir else None
+    # The dense host map exists ONLY when there is no streaming store;
+    # with --out the blocks go straight to disk (O(chunk x tile) host).
+    rho = None if writer is not None else np.zeros((N, N), np.float32)
 
     if writer is not None:
         chunk_plan = writer.chunk_plan(chunk)
     else:
         chunk_plan = [(r, min(chunk, N - r)) for r in range(0, N, chunk)]
 
-    def drain(tag, rho_rows):
-        row0, valid = tag
-        rows_np = unsort(rho_rows)[:valid]
-        rho[row0 : row0 + valid] = rows_np
-        if writer is not None:
-            writer.write_block(row0, rows_np)
-        if progress:
-            print(f"ccm rows {row0}..{row0 + valid} / {N}")
-
-    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
-        for row0, valid in chunk_plan:
-            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
-            streamer.submit((row0, valid), dispatch(rows))
+    phase2 = _phase2_tiled if cfg.target_tile else _phase2_untiled
+    phase2(ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress)
 
     if writer is not None:
-        rho = writer.assemble()
+        rho = writer.assemble(
+            mmap_path=writer.dir / "causal_map" / "data.npy"
+        )
     return CausalMap(rho=rho, optE=optE, simplex_rho=simplex_rhos)

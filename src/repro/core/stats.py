@@ -23,6 +23,18 @@ def simplex_weights(sq_dists: jax.Array, k_valid: jax.Array | int) -> jax.Array:
     w_j = exp(-d_j / d_1) over the k_valid nearest neighbours, row-normalized
     (cppEDM convention: scale by the distance to the nearest neighbour).
 
+    When d_1 == 0 (duplicate points, silent/dead neurons, constant series)
+    the ratio d_j / d_1 degenerates: the eps-clamped exponential underflows
+    to a delta on neighbour 1 even when several neighbours are exactly
+    tied at distance 0.  cppEDM handles this by weighting the TIED
+    neighbours uniformly and dropping the rest (the exp(-d/d_1) limit as
+    d_1 -> 0); we reproduce that branch so degenerate series yield finite
+    weights (and downstream pearson sees no NaN/Inf) instead of an
+    arbitrary winner among exact ties.  For d_1 > 0 — however small — the
+    TRUE ratio is used: it is scale-invariant, so low-amplitude series
+    are weighted exactly like their rescaled counterparts (no
+    absolute-eps cliff).
+
     sq_dists: (..., k_max) sorted ascending.  k_valid: number of neighbours
     actually used (E+1); entries beyond it get weight 0 so every embedding
     dimension can share one padded table shape.
@@ -32,8 +44,11 @@ def simplex_weights(sq_dists: jax.Array, k_valid: jax.Array | int) -> jax.Array:
     # Masked entries may be +inf (self-exclusion with tiny candidate sets);
     # they fall out via exp(-inf) = 0, but keep d1 finite.
     d1 = jnp.where(jnp.isfinite(d[..., :1]), d[..., :1], 0.0)
-    w = jnp.exp(-d / jnp.maximum(d1, _EPS))
+    w = jnp.exp(-d / jnp.where(d1 > 0, d1, 1.0))
     w = jnp.where(jnp.isfinite(w), w, 0.0)
+    # d1 == 0: uniform over the neighbours tied at zero distance (the
+    # exact limit above), not the underflowed delta.
+    w = jnp.where(d1 > 0, w, (d <= 0).astype(w.dtype))
     kmask = jnp.arange(k_max) < k_valid
     w = w * kmask
     return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), _EPS)

@@ -31,6 +31,18 @@ class EDMConfig:
         loop.  2 = double buffering (chunk i+1 dispatched while chunk i's
         device->host copy and row-block write drain); 1 = the fully
         synchronous legacy behaviour.
+      target_tile: phase-2 COLUMN tile width (DESIGN.md SS7).  0 (default)
+        keeps the single-tile path: the full (N, Lp) ts_fut is replicated
+        per device and rho rows span all N columns.  > 0 splits phase 2
+        into a second tiling dimension: kNN tables are built ONCE per row
+        chunk, then targets stream through in column tiles of this width —
+        only the live (tile, Lp) slice is resident per device and rho is
+        emitted as (row-chunk x col-tile) blocks.  Phase 2 then allocates
+        nothing that scales beyond the O(N L) inputs (ts and ts_fut stay
+        host-resident): its own working set is O(chunk x tile) on the
+        host (no (N, N) map when streaming to a store) and
+        O(lib_block x buckets x Lp x k + tile x Lp) per device (no
+        (N, Lp) replication).
       use_kernels: DEPRECATED alias — True selects engine="pallas-compiled"
         (the old kernel routing), False engine="reference".
     """
@@ -44,6 +56,7 @@ class EDMConfig:
     engine: str = "reference"
     bucketed: bool = True
     stream_depth: int = 2
+    target_tile: int = 0
     use_kernels: Optional[bool] = None
     # kNN table construction variants (SSPerf hillclimb #3):
     #   rebuild    — per-E matmul-form rebuild (the PAPER-FAITHFUL shape:
@@ -58,8 +71,10 @@ class EDMConfig:
     dist_dtype: str = "float32"  # bfloat16 halves D-slab HBM traffic
     # k_override: pins the neighbour-table width independent of E_max —
     # used by the dry-run's reduced-E cost compiles so per-E bodies carry
-    # the PRODUCTION top-k cost (k tracks E_max otherwise).
-    k_override: int = 0
+    # the PRODUCTION top-k cost (k tracks E_max otherwise).  None = unset
+    # (k tracks E_max / the bucket set); 0 is rejected so "unset" can never
+    # be confused with a (meaningless) zero-neighbour table.
+    k_override: Optional[int] = None
 
     def __post_init__(self):
         if self.use_kernels is not None:
@@ -84,11 +99,18 @@ class EDMConfig:
             object.__setattr__(self, "use_kernels", None)
         if self.stream_depth < 1:
             raise ValueError("stream_depth must be >= 1")
+        if self.target_tile < 0:
+            raise ValueError("target_tile must be >= 0 (0 = untiled)")
+        if self.k_override is not None and self.k_override < 1:
+            raise ValueError(
+                f"k_override={self.k_override} is invalid: pass None (unset; "
+                "k tracks E_max / the bucket set) or a positive table width"
+            )
 
     @property
     def k_max(self) -> int:
         # Simplex uses E+1 neighbours for embedding dimension E.
-        return self.k_override or self.E_max + 1
+        return self.k_override if self.k_override is not None else self.E_max + 1
 
     def n_points(self, L: int) -> int:
         """Number of embeddable query/candidate points for a length-L series.

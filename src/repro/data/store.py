@@ -2,7 +2,7 @@
 
 Layout: <name>/meta.json + <name>/data.npy (memmap-able).  Mirrors the
 paper's I/O design points: parallel read of the input dataset, and causal-
-map output written as large sequential ROW-BLOCK shards (never the
+map output written as large sequential BLOCK shards (never the
 small-random-write pattern that bottlenecked GPFS, SSIII-C)."""
 from __future__ import annotations
 
@@ -12,13 +12,23 @@ import pathlib
 import numpy as np
 
 
+def save_meta(
+    path: str | pathlib.Path, shape, dtype, meta: dict | None = None
+) -> None:
+    """Write just the zarr-lite meta.json (for data produced elsewhere,
+    e.g. a causal map assembled straight into <name>/data.npy)."""
+    p = pathlib.Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    (p / "meta.json").write_text(
+        json.dumps({"shape": list(shape), "dtype": str(dtype), **(meta or {})})
+    )
+
+
 def save_dataset(path: str | pathlib.Path, ts: np.ndarray, meta: dict | None = None):
     p = pathlib.Path(path)
     p.mkdir(parents=True, exist_ok=True)
     np.save(p / "data.npy", ts)
-    (p / "meta.json").write_text(
-        json.dumps({"shape": list(ts.shape), "dtype": str(ts.dtype), **(meta or {})})
-    )
+    save_meta(p, ts.shape, ts.dtype, meta)
 
 
 def load_dataset(path: str | pathlib.Path, mmap: bool = True) -> np.ndarray:
@@ -26,26 +36,93 @@ def load_dataset(path: str | pathlib.Path, mmap: bool = True) -> np.ndarray:
     return np.load(p / "data.npy", mmap_mode="r" if mmap else None)
 
 
-class RowBlockWriter:
-    """Streamed causal-map output: one .npy per completed row block + a
-    {row0: nrows} manifest — the resume unit of the EDM pipeline.  Coverage
-    is tracked per ROW, so a restart with a different worker count (elastic:
-    different chunk size) resumes exactly where any prior mesh left off."""
+def _union_covers(intervals: list[tuple[int, int]], width: int) -> bool:
+    """True when the union of [a, b) intervals covers [0, width)."""
+    reach = 0
+    for a, b in sorted(intervals):
+        if a > reach:
+            return False
+        reach = max(reach, b)
+        if reach >= width:
+            return True
+    return reach >= width
 
-    def __init__(self, path: str | pathlib.Path, N: int):
+
+class TileWriter:
+    """Streamed causal-map output in (row-chunk x col-tile) blocks + a 2D
+    manifest — the resume unit of the EDM pipeline (DESIGN.md SS7).
+
+    Each completed block is one sequential .npy write (the BeeOND
+    large-sequential-write design point, paper SSIII-C); the manifest maps
+    ``"row0"`` (legacy full-width row block) or ``"row0,col0"`` (tile) to
+    its extent.  Coverage is tracked per ROW — a row counts as covered
+    only when its tiles union to the full column width — so a restart
+    with a different worker count OR tile width (elastic: different chunk
+    and tile geometry) resumes exactly where any prior mesh left off.
+
+    ``col_order``: the bucketed tiled pipeline writes tiles in the
+    bucket-SORTED column order; the permutation is persisted next to the
+    blocks (col_order.npy), verified on resume, and undone at
+    :meth:`assemble` time.  Full-width row blocks are always written in
+    natural column order (the pipeline unsorts before writing).
+    """
+
+    def __init__(self, path: str | pathlib.Path, N: int, M: int | None = None):
         self.dir = pathlib.Path(path)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.N = N
+        self.M = N if M is None else M
         self.manifest = self.dir / "blocks.json"
-        self.done: dict[str, int] = (
+        self.done: dict[str, object] = (
             json.loads(self.manifest.read_text()) if self.manifest.exists() else {}
         )
+        co = self.dir / "col_order.npy"
+        self._col_order: np.ndarray | None = np.load(co) if co.exists() else None
+
+    # ------------------------------------------------------------ coverage
+    def _blocks(self):
+        """Yield (row0, col0, nrows, ncols) for every manifest entry."""
+        for key, val in self.done.items():
+            if "," in key:
+                row0, col0 = (int(s) for s in key.split(","))
+                nr, nc = int(val[0]), int(val[1])
+            else:  # legacy full-width row block: {row0: nrows}
+                row0, col0 = int(key), 0
+                nr, nc = int(val), self.M
+            yield row0, col0, nr, nc
 
     def covered(self) -> np.ndarray:
+        """(N,) bool: rows whose tiles union to the full column width.
+
+        Cost is O(#manifest entries) in the common case: tiles are grouped
+        by their (row0, nrows) span and each span's column intervals are
+        merged ONCE for all its rows.  Only rows under spans that do NOT
+        resolve on their own (mixed tile geometries from an elastic resume
+        with a different chunk/tile size) fall back to a precise per-row
+        interval union — bounded by the crash/overlap region, never
+        O(N x tiles)."""
         cov = np.zeros(self.N, bool)
-        for row0_s, n in self.done.items():
-            row0 = int(row0_s)
-            cov[row0 : row0 + n] = True
+        spans: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        for row0, col0, nr, nc in self._blocks():
+            if col0 == 0 and nc >= self.M:  # full-width fast path
+                cov[row0 : row0 + nr] = True
+            else:
+                spans.setdefault((row0, nr), []).append((col0, col0 + nc))
+        unresolved = []
+        for (row0, nr), ivals in spans.items():
+            if _union_covers(ivals, self.M):
+                cov[row0 : row0 + nr] = True
+            else:
+                unresolved.append((row0, nr, ivals))
+        if unresolved:
+            per_row: dict[int, list[tuple[int, int]]] = {}
+            for row0, nr, ivals in unresolved:
+                for r in range(row0, min(row0 + nr, self.N)):
+                    if not cov[r]:
+                        per_row.setdefault(r, []).extend(ivals)
+            for r, ivals in per_row.items():
+                if _union_covers(ivals, self.M):
+                    cov[r] = True
         return cov
 
     def next_uncovered(self, start: int = 0) -> int | None:
@@ -56,36 +133,121 @@ class RowBlockWriter:
     def chunk_plan(self, chunk: int) -> list[tuple[int, int]]:
         """Ordered (row0, nrows) work list for a resume at chunk granularity.
 
-        Mirrors the pipeline's elastic-resume walk: each chunk starts at the
-        first uncovered row at-or-after the previous chunk's end, and spans
-        min(chunk, N - row0) rows.  Computed up-front so the streaming loop
-        can keep multiple chunks in flight without re-reading coverage
-        (this process is the only writer; see runtime/stream.py).
+        Each maximal RUN of uncovered rows is split into at-most-``chunk``
+        spans, so fragmented coverage (elastic resume after a mesh-size
+        change can leave covered islands mid-range) is skipped rather than
+        recomputed: resume work is proportional to what is actually
+        missing.  Computed up-front so the streaming loop can keep
+        multiple chunks in flight without re-reading coverage (this
+        process is the only writer; see runtime/stream.py).
         """
+        uncovered = np.nonzero(~self.covered())[0]
+        if uncovered.size == 0:
+            return []
+        run_starts = np.nonzero(np.diff(uncovered) > 1)[0] + 1
         plan: list[tuple[int, int]] = []
-        row0 = 0
-        while row0 < self.N:
-            nxt = self.next_uncovered(row0)
-            if nxt is None:
-                break
-            valid = min(chunk, self.N - nxt)
-            plan.append((nxt, valid))
-            row0 = nxt + valid
+        for run in np.split(uncovered, run_starts):
+            s, e = int(run[0]), int(run[-1]) + 1
+            for row0 in range(s, e, chunk):
+                plan.append((row0, min(chunk, e - row0)))
         return plan
 
-    def write_block(self, row0: int, rho_rows: np.ndarray):
-        rho_rows = rho_rows[: max(0, self.N - row0)]
-        np.save(self.dir / f"rows_{row0:08d}.npy", rho_rows)
-        self.done[str(row0)] = int(rho_rows.shape[0])
+    # ------------------------------------------------------------- writing
+    def _commit(self) -> None:
         tmp = self.manifest.with_suffix(".tmp")
         tmp.write_text(json.dumps(self.done))
         tmp.rename(self.manifest)
 
-    def assemble(self) -> np.ndarray:
-        """Gather all blocks into the (N, N) causal map (small N only)."""
-        rho = np.zeros((self.N, self.N), np.float32)
-        for row0_s in self.done:
-            row0 = int(row0_s)
-            rows = np.load(self.dir / f"rows_{row0:08d}.npy")
-            rho[row0 : row0 + rows.shape[0]] = rows[:, : self.N]
+    def ensure_col_order(self, order: np.ndarray | None) -> None:
+        """Declare (and persist) the on-disk column permutation for tile
+        writes; raises if it conflicts with a prior run's layout."""
+        want = np.arange(self.M) if order is None else np.asarray(order)
+        f = self.dir / "col_order.npy"
+        if f.exists():
+            existing = np.load(f)
+            if not np.array_equal(existing, want):
+                raise ValueError(
+                    f"resume column-order mismatch in {self.dir}: the store "
+                    "was written under a different target permutation "
+                    "(different optE/bucketing?); use a fresh --out dir"
+                )
+            self._col_order = None if order is None else existing
+            return
+        if order is None:
+            return  # natural order needs no marker
+        # Full-width row blocks are always natural order (compatible with
+        # any tile permutation); only pre-existing TILES pin the layout.
+        has_tiles = any("," in k for k in self.done)
+        if has_tiles and not np.array_equal(want, np.arange(self.M)):
+            raise ValueError(
+                f"store {self.dir} already holds natural-order tiles; "
+                "cannot add column-permuted tiles (use a fresh --out dir)"
+            )
+        np.save(f, want)
+        self._col_order = want
+
+    def write_block(self, row0: int, rho_rows: np.ndarray):
+        """Full-width row block (legacy single-tile path)."""
+        rho_rows = rho_rows[: max(0, self.N - row0)]
+        np.save(self.dir / f"rows_{row0:08d}.npy", rho_rows)
+        self.done[str(row0)] = int(rho_rows.shape[0])
+        self._commit()
+
+    def write_tile(self, row0: int, col0: int, block: np.ndarray,
+                   commit: bool = True):
+        """One (row-chunk x col-tile) block; columns are on-disk order
+        (i.e. already permuted by col_order when one is declared).
+
+        commit=False defers the manifest rewrite — callers emitting many
+        tiles per row chunk (the 2D pipeline) batch it to one
+        :meth:`commit` per chunk, keeping manifest I/O O(chunks) instead
+        of O(tiles).  Deferring is always safe: an uncommitted tile is
+        merely recomputed on resume (the .npy itself is durable before
+        the manifest ever mentions it)."""
+        block = block[: max(0, self.N - row0), : max(0, self.M - col0)]
+        np.save(self.dir / f"tile_{row0:08d}_{col0:08d}.npy", block)
+        self.done[f"{row0},{col0}"] = [int(block.shape[0]), int(block.shape[1])]
+        if commit:
+            self._commit()
+
+    def commit(self) -> None:
+        """Flush deferred write_tile manifest entries (atomic rewrite)."""
+        self._commit()
+
+    # ------------------------------------------------------------ assembly
+    def assemble(self, mmap_path: str | pathlib.Path | None = None) -> np.ndarray:
+        """Gather all blocks into the (N, M) causal map, undoing col_order.
+
+        mmap_path=None allocates a dense host array (small N only);
+        otherwise the map is assembled straight into a .npy memmap at that
+        path — peak host memory stays O(block), the paper-scale path.
+        """
+        if mmap_path is None:
+            rho = np.zeros((self.N, self.M), np.float32)
+        else:
+            p = pathlib.Path(mmap_path)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            rho = np.lib.format.open_memmap(
+                p, mode="w+", dtype=np.float32, shape=(self.N, self.M)
+            )
+        colmap = self._col_order
+        for key, val in self.done.items():
+            if "," in key:
+                row0, col0 = (int(s) for s in key.split(","))
+                block = np.load(self.dir / f"tile_{row0:08d}_{col0:08d}.npy")
+            else:
+                row0, col0 = int(key), 0
+                block = np.load(self.dir / f"rows_{row0:08d}.npy")[:, : self.M]
+            nr, nc = block.shape
+            if "," in key and colmap is not None:
+                rho[row0 : row0 + nr, colmap[col0 : col0 + nc]] = block
+            else:
+                rho[row0 : row0 + nr, col0 : col0 + nc] = block
+        if mmap_path is not None:
+            rho.flush()
         return rho
+
+
+class RowBlockWriter(TileWriter):
+    """Back-compat name: the full-width row-block writer is the one-tile
+    special case of :class:`TileWriter`."""

@@ -75,6 +75,11 @@ class Engine:
         """Batched simplex lookup: many targets sharing ONE library table.
 
         idx, w: (Lq, k); Y_fut: (B, Lp).  Returns preds (B, Lq).
+
+        The batch axis is the unit of phase-2 column tiling (DESIGN.md
+        SS7): a target tile's bucket segments map directly onto this op
+        with the SAME table — per-target results are independent, so any
+        tile/segment partition of the batch yields bit-identical rho.
         """
         return jax.vmap(lambda y: self.simplex_forecast(idx, w, y))(Y_fut)
 

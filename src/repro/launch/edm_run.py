@@ -3,11 +3,20 @@
   PYTHONPATH=src python -m repro.launch.edm_run \
       --dataset /path/to/store --out /tmp/causal_map
   PYTHONPATH=src python -m repro.launch.edm_run --synthetic 64x600 --out ...
+  # brain-scale memory profile: 2D-tiled phase 2 (DESIGN.md SS7)
+  PYTHONPATH=src python -m repro.launch.edm_run \
+      --synthetic 128x600 --target-tile 32 --out /tmp/causal_map
 
 Reads a zarr-lite dataset (data/store.py), runs distributed simplex
 projection + CCM on all local devices (the production launch wraps the
-same entry point under the pod mesh), streams row blocks to the output
-store, and can RESUME from a killed run (--out manifest)."""
+same entry point under the pod mesh), streams (row-chunk x col-tile)
+blocks to the output store, and can RESUME from a killed run (--out
+manifest).  With --out the causal map is assembled into a disk-backed
+memmap (<out>/causal_map/data.npy) — no dense (N, N) host allocation —
+and --target-tile additionally streams targets through column tiles
+instead of replicating the full (N, Lp) future matrix per device:
+nothing then scales beyond the O(N x L) inputs (host working set
+O(chunk x tile), device O(lib_block x buckets x Lp x k + tile x Lp))."""
 from __future__ import annotations
 
 import argparse
@@ -31,6 +40,12 @@ def main():
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--lib-block", type=int, default=8)
     ap.add_argument(
+        "--target-tile", type=int, default=0,
+        help="phase-2 column tile width (0 = untiled); > 0 streams targets "
+        "in tiles so phase 2 allocates nothing beyond the O(NL) inputs "
+        "(DESIGN.md SS7); output is bit-identical to the untiled path",
+    )
+    ap.add_argument(
         "--engine", default=None, choices=available_engines(),
         help="execution backend (repro.engine registry; default: reference)",
     )
@@ -40,7 +55,7 @@ def main():
     )
     ap.add_argument(
         "--stream-depth", type=int, default=2,
-        help="CCM chunks in flight (2 = double buffering, 1 = synchronous)",
+        help="CCM blocks in flight (2 = double buffering, 1 = synchronous)",
     )
     ap.add_argument(
         "--use-kernels", action="store_true",
@@ -64,7 +79,7 @@ def main():
     cfg = EDMConfig(
         E_max=args.e_max, tau=args.tau, lib_block=args.lib_block,
         engine=engine, bucketed=not args.no_bucketed,
-        stream_depth=args.stream_depth,
+        stream_depth=args.stream_depth, target_tile=args.target_tile,
     )
     t0 = time.time()
     result = run_causal_inference(ts, cfg, out_dir=args.out, progress=True)
@@ -73,14 +88,22 @@ def main():
     n_buckets = len(np.unique(np.asarray(result.optE)))
     print(f"causal map {N}x{N} in {dt:.1f}s "
           f"({N * N / dt:.0f} cross-maps/s); optE mean {result.optE.mean():.2f}; "
-          f"engine {cfg.engine}; buckets {n_buckets}/{cfg.E_max}")
-    store.save_dataset(args.out + "/causal_map", result.rho, {
+          f"engine {cfg.engine}; buckets {n_buckets}/{cfg.E_max}; "
+          f"tile {cfg.target_tile or N}")
+    meta = {
         "optE": result.optE.tolist(),
         "engine": cfg.engine,
         "bucketed": cfg.bucketed,
         "n_buckets": int(n_buckets),
         "stream_depth": cfg.stream_depth,
-    })
+        "target_tile": cfg.target_tile,
+    }
+    # The pipeline already assembled the map into <out>/causal_map/data.npy
+    # (memmap; no dense host copy) — only the zarr-lite meta is missing.
+    # Re-saving result.rho here would truncate the very file backing it.
+    store.save_meta(
+        args.out + "/causal_map", result.rho.shape, result.rho.dtype, meta
+    )
 
 
 if __name__ == "__main__":

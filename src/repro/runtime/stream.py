@@ -7,7 +7,7 @@ its compute AND device->host copy), write its row block, only then build
 and dispatch chunk i+1.  :class:`ChunkStreamer` keeps up to ``depth``
 chunks in flight instead, so with depth=2 (double buffering) chunk i+1's
 host->device transfer and compute are already queued while chunk i's
-copy-out and RowBlockWriter write drain — the streaming store comes off
+copy-out and TileWriter write drain — the streaming store comes off
 the critical path (paper SSIII-C's sequential-block-write design point,
 now overlapped).
 
@@ -26,8 +26,12 @@ class ChunkStreamer:
     """Bounded queue of in-flight device chunks with ordered drains.
 
     drain(tag, host_array) is called in submission order — required by
-    consumers like RowBlockWriter whose resume manifest must only cover
-    rows that are durably on disk.
+    consumers like TileWriter whose resume manifest must only cover
+    rows that are durably on disk.  Tags are opaque to the streamer; the
+    EDM pipeline uses (row0, valid) for full-width row chunks and
+    (row0, col0, valid) for the tiled 2D decomposition (DESIGN.md SS7),
+    where depth bounds the number of (row-chunk x col-tile) blocks in
+    flight — i.e. device-side live tiles — not just row chunks.
     """
 
     def __init__(
