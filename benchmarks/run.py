@@ -421,6 +421,116 @@ def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference", tile=32):
     return out
 
 
+# ----------------------------------------------------- kNN selection bench
+def knn_selection_bench(Lc_sweep=(1000, 2000, 4000), Lq=128, N=128,
+                        L_ref=1000):
+    """BENCH_knn.json (DESIGN.md SS8): slab vs streaming kNN table
+    construction for a FIXED 128-row query block against candidate
+    libraries of growing length Lc, both engines.
+
+    Records, per engine and per Lc: build wall time for the slab and
+    streaming layouts plus the PEAK DISTANCE WORKING SET each needs —
+    the slab grows ~linearly in Lc (the O(Lq x Lc) slab; quadratic once
+    the query axis grows with it), streaming stays FLAT (O(Lq x
+    (k + tile)) + carry) — and the phase-1 (simplex sweep) wall clock at
+    the N x L_ref reference workload under auto routing vs forced
+    streaming, the no-regression guard for the auto threshold.
+    Bit-identity of the two layouts is asserted on the smallest workload
+    (the full sweep lives in tests/test_knn_streaming.py).
+    """
+    from repro.core import knn
+    from repro.engine import get_engine
+    from repro.kernels.knn_topk.knn_topk import stream_vmem_bytes
+
+    E_max, k = 20, 21
+    tile = knn.STREAM_DEFAULT_TILE_C
+    out = {
+        "bench": "knn_selection",
+        "E_max": E_max,
+        "k": k,
+        "Lq": Lq,
+        "tile_c": tile,
+        "slab_auto_max_lc": knn.SLAB_AUTO_MAX_LC,
+        "engines": {},
+        "phase1": {},
+    }
+    pair = dummy_brain(2, max(Lc_sweep) + E_max + 1, seed=3)
+    checked = False
+    for engine in ("reference", "pallas-interpret"):
+        eng = get_engine(engine)
+        cfg_slab = EDMConfig(E_max=E_max, engine=engine, knn_tile_c=-1)
+        cfg_stream = EDMConfig(E_max=E_max, engine=engine, knn_tile_c=tile)
+        rows = []
+        for Lc in Lc_sweep:
+            Vq = lag_matrix(jnp.asarray(pair[0]), E_max, 1, Lq)
+            Vc = lag_matrix(jnp.asarray(pair[1]), E_max, 1, Lc)
+            f_slab = jax.jit(
+                lambda Vq, Vc, c=cfg_slab: eng.knn_tables(
+                    Vq, Vc, k, exclude_self=False, cfg=c
+                )
+            )
+            f_stream = jax.jit(
+                lambda Vq, Vc, c=cfg_stream: eng.knn_tables(
+                    Vq, Vc, k, exclude_self=False, cfg=c
+                )
+            )
+            t_slab = _time(lambda: f_slab(Vq, Vc), reps=1)
+            t_stream = _time(lambda: f_stream(Vq, Vc), reps=1)
+            if not checked:  # bit-identity spot check on the cheapest cell
+                a, b = f_slab(Vq, Vc), f_stream(Vq, Vc)
+                assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                assert np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
+                checked = True
+            # peak distance working set: the slab materializes (Lq, Lc);
+            # streaming holds one tile + merge buffer + running tables
+            # (jnp path) or the per-program VMEM budget (pallas path) —
+            # both INDEPENDENT of Lc
+            if engine == "reference":
+                ws_stream = knn.streaming_bytes(Lq, k, min(tile, Lc), E_max)
+            else:
+                ws_stream = stream_vmem_bytes(E_max, k, Lq, min(tile, Lc))
+            rows.append(
+                {
+                    "Lc": Lc,
+                    "slab_s": t_slab,
+                    "stream_s": t_stream,
+                    "slab_working_set_bytes": knn.slab_bytes(Lq, Lc),
+                    "stream_working_set_bytes": ws_stream,
+                }
+            )
+            row(
+                f"knn_{engine}_Lc{Lc}", t_slab,
+                f"stream_s={t_stream:.3f};slab_MiB="
+                f"{rows[-1]['slab_working_set_bytes'] / 2**20:.2f};"
+                f"stream_MiB={ws_stream / 2**20:.2f}",
+            )
+        out["engines"][engine] = rows
+
+    # ---- phase-1 wall clock at the reference workload -----------------
+    ts = jnp.asarray(dummy_brain(N, L_ref, seed=1))
+    times = {}
+    for name, cfg in {
+        "auto": EDMConfig(E_max=E_max),
+        "slab": EDMConfig(E_max=E_max, knn_tile_c=-1),
+        "streaming": EDMConfig(E_max=E_max, knn_tile_c=tile),
+    }.items():
+        times[name] = _time(lambda c=cfg: simplex_batch(ts, c))
+    out["phase1"] = {
+        "workload": {"N": N, "L": L_ref},
+        "auto_s": times["auto"],
+        "slab_s": times["slab"],
+        "streaming_s": times["streaming"],
+        "auto_vs_slab": times["auto"] / times["slab"],
+    }
+    row(
+        "knn_phase1_ref", times["auto"],
+        f"slab_s={times['slab']:.3f};stream_s={times['streaming']:.3f};"
+        f"auto_vs_slab={times['auto'] / times['slab']:.2f}x",
+    )
+    (REPO / "BENCH_knn.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
 # ------------------------------------------------------------------ roofline
 def roofline_summary():
     d = RESULTS / "dryrun"
@@ -449,6 +559,7 @@ BENCHES = {
     "fig9b": fig9b_knn_impl_variants,
     "fig3": fig3_strong_scaling,
     "phase2": phase2_engine_bench,
+    "knn": knn_selection_bench,
     "roofline": roofline_summary,
 }
 

@@ -28,7 +28,15 @@ live (tile, Lp) slice of the target futures needs to be resident.
 bit-identical causal maps.
 
 All device compute routes through the execution engine named by
-cfg.engine (repro.engine; DESIGN.md SS5).
+cfg.engine (repro.engine; DESIGN.md SS5).  Table construction inside the
+engines additionally routes between the (Lq, Lc) distance-SLAB and the
+candidate-tiled STREAMING selection (cfg.knn_tile_c, DESIGN.md SS8) —
+bit-identical tables under the cumulative knn_impl variants (the
+default), so every CCM path here is oblivious to the choice;
+at paper-scale library lengths the streaming route is what keeps per-
+device table construction inside the VMEM/HBM budget.  For libraries
+too long for one device, pipeline.knn_tables_library_sharded shards the
+CANDIDATE axis and reduces per-shard tables host-side.
 """
 from __future__ import annotations
 
@@ -119,7 +127,8 @@ def ccm_row_tables(x: jax.Array, cfg: EDMConfig) -> tuple[jax.Array, jax.Array]:
 
     x: (L,).  Returns (idx, w), each (E_max, Lp, k_max).  Tables depend
     only on the library series, so callers reuse them across every target
-    tile of a chunk (DESIGN.md SS7).
+    tile of a chunk (DESIGN.md SS7).  The engine picks slab vs streaming
+    selection per cfg.knn_tile_c (DESIGN.md SS8) — identical tables.
     """
     eng = engines.get_engine(cfg.engine)
     Lp = cfg.n_points(x.shape[0])

@@ -12,6 +12,17 @@ matrix for every embedding dimension E in one O(Lq*Lc) sweep per E:
 where V = lag_matrix(x).  mpEDM recomputes each D_E from scratch
 (O(Lq*Lc*E) each, O(Lq*Lc*E_max^2) total); the recurrence is an E_max/2 x
 algorithmic saving on table construction, with identical results.
+
+Two SELECTION layouts over that recurrence (DESIGN.md SS8):
+  * slab      — materialize the full (Lq, Lc) distance matrix and
+    lax.top_k it per E (the historical path; fastest at small Lc);
+  * streaming — scan over candidate tiles of width ``tile_c``, carrying a
+    running (Lq, k) top-k per E that each tile is merged into, so no
+    O(Lq*Lc) array is ever built.  Bit-identical to the slab path
+    (including tie order) for every k <= Lc.
+
+``resolve_knn_tile`` is the shared slab/streaming auto threshold used by
+every engine (EDMConfig.knn_tile_c).
 """
 from __future__ import annotations
 
@@ -19,11 +30,56 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import embedding
 from repro.core.stats import simplex_weights
 
 INF = jnp.float32(jnp.inf)
+
+# Slab/streaming auto threshold (DESIGN.md SS8): below this candidate count
+# the (Lq, Lc) slab fits comfortably and lax.top_k over the full row is the
+# fastest selection; above it the streaming tiled merge keeps the distance
+# working set flat in Lc.  EDMConfig.knn_tile_c = 0 routes through this.
+SLAB_AUTO_MAX_LC = 4096
+# Default candidate-tile width for the auto streaming path: wide enough to
+# amortize the per-tile merge (k + tile_c columns), narrow enough that the
+# per-tile working set stays a few MB at paper block sizes.
+STREAM_DEFAULT_TILE_C = 1024
+
+
+def resolve_knn_tile(Lc: int, knn_tile_c: int) -> int:
+    """Shared slab/streaming routing (EDMConfig.knn_tile_c semantics).
+
+    Returns 0 for the slab path or a positive candidate-tile width for the
+    streaming builders:  knn_tile_c = 0 -> auto (slab while Lc <=
+    SLAB_AUTO_MAX_LC, else streaming with STREAM_DEFAULT_TILE_C);
+    -1 -> force slab; > 0 -> force streaming with that tile width.
+    """
+    if knn_tile_c == -1:
+        return 0
+    if knn_tile_c == 0:
+        return 0 if Lc <= SLAB_AUTO_MAX_LC else STREAM_DEFAULT_TILE_C
+    return knn_tile_c
+
+
+def slab_bytes(Lq: int, Lc: int, dist_dtype=jnp.float32) -> int:
+    """Peak distance-working-set bytes of the SLAB selection path."""
+    return Lq * Lc * jnp.dtype(dist_dtype).itemsize
+
+
+def streaming_bytes(
+    Lq: int, k: int, tile_c: int, n_sel: int, dist_dtype=jnp.float32
+) -> int:
+    """Peak distance-working-set bytes of the STREAMING selection path:
+    one (Lq, tile_c) tile in dist_dtype + the widest merge buffer
+    (Lq, k + tile_c) f32 pair + the (n_sel, Lq, k) running tables.
+    Independent of Lc — the streaming scaling guarantee (DESIGN.md SS8)."""
+    it = jnp.dtype(dist_dtype).itemsize
+    tile = Lq * tile_c * it
+    merge = Lq * (k + tile_c) * (4 + 4)  # f32 dists + i32 ids
+    carry = n_sel * Lq * k * (4 + 4)
+    return tile + merge + carry
 
 # Trace-time instrumentation: total (Lq, k) table rows selected by the
 # builders below, keyed by builder kind.  jit caches traces, so tests that
@@ -35,6 +91,24 @@ TABLE_ROWS_BUILT = {"all_E": 0, "bucketed": 0}
 def reset_table_counters() -> None:
     for k in TABLE_ROWS_BUILT:
         TABLE_ROWS_BUILT[k] = 0
+
+
+def _acc_sq(D: jax.Array, vq: jax.Array, vc: jax.Array, dist_dtype) -> jax.Array:
+    """One cumulative-E distance update with PINNED square-then-add rounding.
+
+    LLVM contracts ``D + (vq - vc)**2`` into an FMA inside some XLA:CPU
+    fusions but not others (scan body vs unrolled, slab vs tile shapes),
+    shifting results by 1 ulp and breaking the slab==streaming bit-identity
+    contract (DESIGN.md SS8).  The ``maximum(sq, 0)`` guard — numerically
+    exact, squares are non-negative — sits between the multiply and the
+    add, so no context can contract them; every cumulative builder (slab,
+    bucketed, streaming, single-E) therefore runs the identical
+    square-then-add float sequence.  ``optimization_barrier`` does NOT
+    work here: it is dropped before the fusion/codegen stage that decides
+    contraction, and ``abs`` is folded by the algebraic simplifier.
+    """
+    sq = jnp.square(vq[:, None] - vc[None, :]).astype(dist_dtype)
+    return D + jnp.maximum(sq, jnp.zeros((), dist_dtype))
 
 
 def knn_tables_all_E(
@@ -92,7 +166,7 @@ def knn_tables_all_E(
 
     def step(D, vs):
         vq, vc = vs
-        D = D + jnp.square(vq[:, None] - vc[None, :]).astype(dist_dtype)
+        D = _acc_sq(D, vq, vc, dist_dtype)
         return D, select(D)
 
     D0 = jnp.zeros((Lq, Lc), dist_dtype)
@@ -188,12 +262,181 @@ def knn_tables_bucketed(
         outs = []
         D = jnp.zeros((Lq, Lc), dist_dtype)
         for e in range(buckets[-1]):
-            D = D + jnp.square(Vq[e][:, None] - Vc[e][None, :]).astype(dist_dtype)
+            D = _acc_sq(D, Vq[e], Vc[e], dist_dtype)
             if e + 1 in want:
                 outs.append(select(D))
     indices = jnp.stack([o[0] for o in outs])
     sq_dists = jnp.stack([o[1] for o in outs])
     return indices, sq_dists
+
+
+# ------------------------------------------- streaming candidate-tiled path
+def _knn_tables_streaming(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    tile_c: int,
+    select_Es: tuple[int, ...],
+    dist_dtype,
+    col_offset=0,
+    col_hi=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Candidate-tiled kNN selection: no (Lq, Lc) distance slab, ever.
+
+    Scans candidate tiles of width ``tile_c``; within each tile the
+    cumulative-E recurrence accumulates a (Lq, tile_c) distance block, and
+    at every E in ``select_Es`` the tile is merged into the running (Lq, k)
+    table via ``top_k(concat([running, tile]))``.  The peak distance
+    working set is O(Lq * (k + tile_c)) + the (n_sel, Lq, k) carry —
+    independent of Lc (DESIGN.md SS8).
+
+    BIT-IDENTITY with the CUMULATIVE slab impls (scan/unroll/blocked —
+    NOT the matmul-form ``rebuild`` A/B shape, whose near-tie ordering
+    already differs from them), values AND tie order, argument:
+    per-element distances accumulate lag terms in the same sequential
+    order, so they are bit-equal to the slab's; lax.top_k breaks value
+    ties by lowest position; in the merged buffer the running entries come
+    first and (by induction over tiles, the first tile being selected
+    directly with no synthetic carry) hold globally-smaller candidate ids
+    in tie-stable order, while tile columns follow in ascending global id
+    — so equal distances always resolve to the lowest candidate id,
+    exactly the slab lax.top_k rule.  Holds for every k <= Lc, including
+    all-tied (dead/duplicate-neuron) rows.
+
+    ``col_offset``/``col_hi`` (library sharding, DESIGN.md SS8): candidate
+    column j of Vc is GLOBAL candidate ``col_offset + j``; columns at or
+    beyond ``col_hi`` (default col_offset + Lc) are padding and masked to
+    +inf.  ``exclude_self`` masks global column == query row.  Both may be
+    traced scalars, so per-shard builds jit/shard_map with one trace.
+    """
+    if not select_Es or list(select_Es) != sorted(set(select_Es)):
+        raise ValueError(f"select_Es must be ascending, distinct: {select_Es}")
+    E_hi = select_Es[-1]
+    E_rows, Lq = Vq.shape
+    Lc = Vc.shape[1]
+    if E_hi > E_rows:
+        raise ValueError(f"selection E {E_hi} exceeds lag rows {E_rows}")
+    if k > Lc:
+        raise ValueError(f"k={k} exceeds candidate count Lc={Lc}")
+    # First tile selects directly (no synthetic carry entries), so it must
+    # be at least k wide; clamping also avoids over-padding tiny libraries.
+    tile_c = max(k, min(tile_c, Lc))
+    n_tiles = -(-Lc // tile_c)
+    Vq = Vq[:E_hi]
+    Vc = jnp.pad(Vc[:E_hi], ((0, 0), (0, n_tiles * tile_c - Lc)))
+    tiles = Vc.reshape(E_hi, n_tiles, tile_c).transpose(1, 0, 2)
+    starts = jnp.arange(n_tiles, dtype=jnp.int32) * tile_c
+    if col_hi is None:
+        col_hi = col_offset + Lc
+    want = set(select_Es)
+    row_ids = jnp.arange(Lq, dtype=jnp.int32)[:, None]
+
+    def tile_tables(run, vc_t, start):
+        cols = col_offset + start + jnp.arange(tile_c, dtype=jnp.int32)[None, :]
+        invalid = jnp.broadcast_to(cols >= col_hi, (Lq, tile_c))
+        if exclude_self:
+            invalid = invalid | (cols == row_ids)
+        cols_b = jnp.broadcast_to(cols, (Lq, tile_c)).astype(jnp.int32)
+        D = jnp.zeros((Lq, tile_c), dist_dtype)
+        out_i, out_d, si = [], [], 0
+        for e in range(E_hi):
+            D = _acc_sq(D, Vq[e], vc_t[e], dist_dtype)
+            if e + 1 not in want:
+                continue
+            Dm = jnp.where(invalid, INF, D.astype(jnp.float32))
+            if run is None:
+                md, mi = Dm, cols_b
+            else:
+                md = jnp.concatenate([run[1][si], Dm], axis=1)
+                mi = jnp.concatenate([run[0][si], cols_b], axis=1)
+            neg_d, pos = jax.lax.top_k(-md, k)
+            out_i.append(jnp.take_along_axis(mi, pos, axis=1))
+            out_d.append(-neg_d)
+            si += 1
+        return jnp.stack(out_i), jnp.stack(out_d)
+
+    carry = tile_tables(None, tiles[0], starts[0])
+    if n_tiles == 1:
+        return carry
+
+    def step(run, xs):
+        return tile_tables(run, xs[0], xs[1]), None
+
+    (idx, dist), _ = jax.lax.scan(step, carry, (tiles[1:], starts[1:]))
+    return idx, dist
+
+
+def knn_tables_all_E_streaming(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k_max: int,
+    exclude_self: bool,
+    tile_c: int,
+    dist_dtype=jnp.float32,
+    col_offset=0,
+    col_hi=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming counterpart of :func:`knn_tables_all_E` — identical
+    (idx, sq_dists) tables, (E_max, Lq, k_max) each, built without ever
+    materializing the (Lq, Lc) distance slab (DESIGN.md SS8)."""
+    E_max, Lq = Vq.shape
+    unsharded = col_hi is None and isinstance(col_offset, int) and col_offset == 0
+    if exclude_self and unsharded and Lq != Vc.shape[1]:
+        raise ValueError("exclude_self requires query set == candidate set")
+    TABLE_ROWS_BUILT["all_E"] += E_max
+    return _knn_tables_streaming(
+        Vq, Vc, k_max, exclude_self, tile_c,
+        tuple(range(1, E_max + 1)), dist_dtype, col_offset, col_hi,
+    )
+
+
+def knn_tables_bucketed_streaming(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    buckets: tuple[int, ...],
+    tile_c: int,
+    dist_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming counterpart of :func:`knn_tables_bucketed` — identical
+    (len(buckets), Lq, k) tables; the per-tile distance accumulation still
+    sweeps e = 1..max(buckets) but selection (and the carry) exists only
+    at bucket dimensions."""
+    if not buckets or list(buckets) != sorted(set(buckets)):
+        raise ValueError(f"buckets must be ascending and distinct: {buckets}")
+    if exclude_self and Vq.shape[1] != Vc.shape[1]:
+        raise ValueError("exclude_self requires query set == candidate set")
+    TABLE_ROWS_BUILT["bucketed"] += len(buckets)
+    return _knn_tables_streaming(
+        Vq, Vc, k, exclude_self, tile_c, tuple(buckets), dist_dtype
+    )
+
+
+def merge_shard_tables(
+    idx_parts, dist_parts, k: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side reduction of per-candidate-shard top-k tables to the
+    global top-k — the building block for paper-style multi-node libraries
+    (DESIGN.md SS8).
+
+    idx_parts / dist_parts: sequences of (..., Lq, k_s) tables whose
+    indices are GLOBAL candidate ids (each shard selected over its own
+    candidate slice via ``col_offset``).  The merge key is
+    (distance ascending, id ascending) — exactly lax.top_k's tie rule —
+    so merging shard tables reproduces the unsharded slab/streaming table
+    bit-for-bit whenever k <= the global candidate count.
+    """
+    idx = np.concatenate([np.asarray(p) for p in idx_parts], axis=-1)
+    dist = np.concatenate([np.asarray(p) for p in dist_parts], axis=-1)
+    if k is None:
+        k = min(np.asarray(p).shape[-1] for p in idx_parts)
+    order = np.lexsort((idx, dist))[..., :k]
+    return (
+        np.take_along_axis(idx, order, axis=-1),
+        np.take_along_axis(dist, order, axis=-1),
+    )
 
 
 def _matmul_sq_dists(dq: jax.Array, dc: jax.Array) -> jax.Array:
@@ -230,16 +473,11 @@ def knn_table_single_E(
     dq = Vq[:E]  # (E, Lq)
     dc = Vc[:E]
     if matmul_form:
-        D = (
-            jnp.sum(dq * dq, axis=0)[:, None]
-            + jnp.sum(dc * dc, axis=0)[None, :]
-            - 2.0 * (dq.T @ dc)
-        )
-        D = jnp.maximum(D, 0.0)
+        D = _matmul_sq_dists(dq, dc)
     else:
         D = jnp.zeros((Vq.shape[1], Vc.shape[1]), jnp.float32)
         for e in range(E):  # sequential, same fp order as the scan
-            D = D + jnp.square(dq[e][:, None] - dc[e][None, :])
+            D = _acc_sq(D, dq[e], dc[e], jnp.float32)
     if exclude_self:
         D = jnp.where(jnp.eye(Vq.shape[1], dtype=bool), INF, D)
     if candidate_mask is not None:

@@ -42,7 +42,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import ccm, simplex
+from repro.core import ccm, knn, simplex
 from repro.core.types import CausalMap, EDMConfig
 from repro.data.store import TileWriter
 from repro.runtime.stream import ChunkStreamer
@@ -184,6 +184,73 @@ def make_ccm_tile_fn_bucketed(mesh, cfg: EDMConfig):
         )
 
     return for_plan
+
+
+# ----------------------------------------- library-sharded kNN (DESIGN SS8)
+def make_knn_shard_fn(mesh, cfg: EDMConfig, k: int, exclude_self: bool,
+                      tile_c: int):
+    """(Vq repl, Vc cols sharded, [lo, hi) bounds sharded) -> per-shard
+    top-k tables stacked on a leading shard axis, (W, E_max, Lq, k) each.
+
+    Every device runs the STREAMING builder over its own candidate shard
+    with global column ids (``col_offset``/``col_hi``), so per-device
+    memory is O(E_max x Lc/W + Lq x (k + tile)) and no device ever sees
+    the full candidate axis — the paper-style multi-node library building
+    block.  Zero collectives; the reduction is the host-side
+    :func:`repro.core.knn.merge_shard_tables`.
+    """
+    axes = _flat(mesh)
+
+    def local(Vq, Vc_shard, bounds):
+        idx, d = knn.knn_tables_all_E_streaming(
+            Vq, Vc_shard, k, exclude_self=exclude_self, tile_c=tile_c,
+            dist_dtype=jnp.dtype(cfg.dist_dtype),
+            col_offset=bounds[0, 0], col_hi=bounds[0, 1],
+        )
+        return idx[None], d[None]
+
+    tspec = P(axes, None, None, None)
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(None, None), P(None, axes), P(axes, None)),
+            out_specs=(tspec, tspec),
+            check_rep=False,
+        )
+    )
+
+
+def knn_tables_library_sharded(
+    Vq, Vc, k: int, cfg: EDMConfig, *, exclude_self: bool, mesh=None
+) -> tuple[np.ndarray, np.ndarray]:
+    """kNN tables with the CANDIDATE (library) axis sharded across devices.
+
+    Each device selects top-k over its candidate shard (streaming
+    builders, global column ids); a host-side merge keyed on
+    (distance, id) — the lax.top_k tie rule — reduces the shard tables,
+    so the result is bit-identical to the single-device slab/streaming
+    table whenever k <= Lc.  Returns host (idx, sq_dists), each
+    (E_max, Lq, k).
+    """
+    if mesh is None:
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("workers",))
+    W = mesh.size
+    Lc = Vc.shape[1]
+    if k > Lc:
+        raise ValueError(f"k={k} exceeds candidate count Lc={Lc}")
+    shard = -(-Lc // W)
+    Vc_p = jnp.pad(jnp.asarray(Vc), ((0, 0), (0, shard * W - Lc)))
+    lo = np.arange(W, dtype=np.int32) * shard
+    bounds = np.stack([lo, np.minimum(lo + shard, Lc)], axis=1)
+    tile_c = knn.resolve_knn_tile(shard, cfg.knn_tile_c) or shard
+    # A shard narrower than k still contributes all its candidates; the
+    # global top-k can draw at most min(k, shard) entries from one shard.
+    k_s = min(k, shard)
+    fn = make_knn_shard_fn(mesh, cfg, k_s, exclude_self, tile_c)
+    idx_sh, d_sh = fn(jnp.asarray(Vq), Vc_p, jnp.asarray(bounds))
+    return knn.merge_shard_tables(np.asarray(idx_sh), np.asarray(d_sh), k=k)
 
 
 def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:

@@ -43,6 +43,16 @@ class EDMConfig:
         host (no (N, N) map when streaming to a store) and
         O(lib_block x buckets x Lp x k + tile x Lp) per device (no
         (N, Lp) replication).
+      knn_tile_c: kNN SELECTION layout (DESIGN.md SS8).  0 (default) =
+        auto: the (Lq, Lc) distance-slab path while the candidate count is
+        at most knn.SLAB_AUTO_MAX_LC, else streaming candidate tiles of
+        knn.STREAM_DEFAULT_TILE_C.  > 0 = force the streaming builders
+        with that tile width; -1 = force the slab path.  Streaming keeps
+        the distance working set O(Lq x (k + tile)) — independent of the
+        library length — and is bit-identical to the slab path (values
+        and tie order) on every engine, for every CUMULATIVE knn_impl;
+        knn_impl="rebuild" (matmul-form A/B numerics) applies only while
+        the slab route is active, so pin knn_tile_c=-1 alongside it.
       use_kernels: DEPRECATED alias — True selects engine="pallas-compiled"
         (the old kernel routing), False engine="reference".
     """
@@ -68,7 +78,8 @@ class EDMConfig:
     #                HBM-traffic frontier (DEFAULT; falls back to unroll
     #                when E_max %% g != 0)
     knn_impl: str = "blocked:4"
-    dist_dtype: str = "float32"  # bfloat16 halves D-slab HBM traffic
+    dist_dtype: str = "float32"  # bfloat16 halves D-slab/tile HBM traffic
+    knn_tile_c: int = 0  # 0 auto; >0 streaming tile width; -1 force slab
     # k_override: pins the neighbour-table width independent of E_max —
     # used by the dry-run's reduced-E cost compiles so per-E bodies carry
     # the PRODUCTION top-k cost (k tracks E_max otherwise).  None = unset
@@ -101,6 +112,11 @@ class EDMConfig:
             raise ValueError("stream_depth must be >= 1")
         if self.target_tile < 0:
             raise ValueError("target_tile must be >= 0 (0 = untiled)")
+        if self.knn_tile_c < -1:
+            raise ValueError(
+                f"knn_tile_c={self.knn_tile_c} is invalid: 0 = auto, "
+                "> 0 = streaming tile width, -1 = force slab"
+            )
         if self.k_override is not None and self.k_override < 1:
             raise ValueError(
                 f"k_override={self.k_override} is invalid: pass None (unset; "

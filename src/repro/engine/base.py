@@ -37,11 +37,25 @@ class Engine:
     name: str = "base"
 
     # -------------------------------------------------------------- ops
+    @staticmethod
+    def knn_selection_tile(Lc: int, cfg) -> int:
+        """Shared slab/streaming routing for kNN-table construction
+        (DESIGN.md SS8): 0 = build the (Lq, Lc) distance slab, > 0 =
+        stream candidate tiles of that width.  One resolver for every
+        backend so cfg.knn_tile_c means the same thing under all engines
+        and the slab path stays the small-L fast case."""
+        from repro.core import knn
+
+        return knn.resolve_knn_tile(Lc, cfg.knn_tile_c)
+
     def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
         """kNN tables for every embedding dimension 1..E_max.
 
         Vq: (E_max, Lq) query lag matrix, Vc: (E_max, Lc) candidates.
-        Returns (idx, sq_dists), each (E_max, Lq, k).
+        Returns (idx, sq_dists), each (E_max, Lq, k).  Implementations
+        route through :meth:`knn_selection_tile`; slab and streaming
+        selections are bit-identical, so the routing is invisible to
+        callers.
         """
         raise NotImplementedError
 

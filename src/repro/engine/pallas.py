@@ -25,15 +25,25 @@ class PallasEngine(Engine):
         return default_interpret() if self.interpret is None else self.interpret
 
     def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
-        from repro.kernels.knn_topk.ops import knn_topk
+        from repro.kernels.knn_topk.ops import knn_topk, knn_topk_streaming
 
+        tile = self.knn_selection_tile(Vc.shape[1], cfg)
+        if tile:
+            # Streaming kernel (DESIGN.md SS8): per-program VMEM is flat
+            # in Lc, so library length is HBM-bound, not VMEM-bound.
+            return knn_topk_streaming(
+                Vq, Vc, k, exclude_self=exclude_self, tile_c=tile,
+                dist_dtype=cfg.dist_dtype, interpret=self._interpret(),
+            )
         return knn_topk(
-            Vq, Vc, k, exclude_self=exclude_self, interpret=self._interpret()
+            Vq, Vc, k, exclude_self=exclude_self,
+            dist_dtype=cfg.dist_dtype, interpret=self._interpret(),
         )
 
-    # knn_tables_bucketed: the base truncate-to-max(buckets) + gather is
-    # the whole saving available without a bucket-aware kernel (in-kernel
-    # bucket masking: DESIGN.md SS3, future work).
+    # knn_tables_bucketed: the base truncate-to-max(buckets) + gather
+    # (routed through knn_tables above, so it inherits the slab/streaming
+    # selection) is the whole saving available without a bucket-aware
+    # kernel (in-kernel bucket masking: DESIGN.md SS3, future work).
 
     def ccm_lookup(self, idx, w, Y_fut):
         from repro.kernels.ccm_lookup.ops import ccm_lookup

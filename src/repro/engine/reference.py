@@ -1,11 +1,18 @@
 """Pure-jnp reference engine — the oracle path (DESIGN.md SS5).
 
-Delegates to core/knn.py: cumulative-E recurrence + lax.top_k, honouring
-the ``knn_impl`` / ``dist_dtype`` hillclimb knobs on EDMConfig.
+Delegates to core/knn.py, honouring the ``knn_impl`` / ``dist_dtype``
+hillclimb knobs on EDMConfig and the slab/streaming selection routing
+(``knn_tile_c``, DESIGN.md SS8): small libraries take the slab +
+lax.top_k path, large ones the candidate-tiled streaming scan.
+Streaming is bit-identical to the CUMULATIVE slab impls
+(scan/unroll/blocked); ``knn_impl="rebuild"`` — the paper-faithful
+matmul-form A/B shape, whose near-tie ordering already differs from the
+cumulative impls — is honoured only while the slab route is active, so
+runs that pin it for an A/B should also pin ``knn_tile_c=-1`` to keep
+the shape across the auto threshold.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.engine.base import Engine
@@ -17,6 +24,12 @@ class ReferenceEngine(Engine):
     def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
         from repro.core import knn
 
+        tile = self.knn_selection_tile(Vc.shape[1], cfg)
+        if tile:
+            return knn.knn_tables_all_E_streaming(
+                Vq, Vc, k, exclude_self=exclude_self, tile_c=tile,
+                dist_dtype=jnp.dtype(cfg.dist_dtype),
+            )
         return knn.knn_tables_all_E(
             Vq, Vc, k, exclude_self=exclude_self,
             impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),
@@ -25,6 +38,12 @@ class ReferenceEngine(Engine):
     def knn_tables_bucketed(self, Vq, Vc, k, *, buckets, exclude_self, cfg):
         from repro.core import knn
 
+        tile = self.knn_selection_tile(Vc.shape[1], cfg)
+        if tile:
+            return knn.knn_tables_bucketed_streaming(
+                Vq, Vc, k, exclude_self=exclude_self, buckets=buckets,
+                tile_c=tile, dist_dtype=jnp.dtype(cfg.dist_dtype),
+            )
         return knn.knn_tables_bucketed(
             Vq, Vc, k, exclude_self=exclude_self, buckets=buckets,
             impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),

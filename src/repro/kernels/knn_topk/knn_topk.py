@@ -1,20 +1,41 @@
-"""Pallas TPU kernel: cumulative multi-E pairwise distances + fused top-k.
+"""Pallas TPU kernels: cumulative multi-E pairwise distances + fused top-k.
 
 The paper's hot spot (97% of cppEDM runtime) re-architected for TPU
-(DESIGN.md SS2):
+(DESIGN.md SS2/SS8).  Two selection layouts:
 
-  * one pass over query row-blocks; the (block_q, Lc) distance slab lives in
-    VMEM and is *accumulated* across embedding dimensions E = 1..E_max
-    (cumulative recurrence) instead of rebuilt per E;
-  * top-k is a fused k-pass masked argmin on the VPU (k = E+1 <= 21); TPU has
-    no radix-sort analogue, and k-pass selection is O(k*Lc) vector work per
-    row versus O(Lc log Lc) for a sort;
-  * candidate columns are padded to the 128-lane boundary and masked with
-    +inf so the MXU/VPU tiles stay aligned.
+SLAB (``knn_topk_kernel``, small libraries): one pass over query
+row-blocks; the (block_q, Lc_pad) distance slab lives in VMEM and is
+*accumulated* across embedding dimensions E = 1..E_max (cumulative
+recurrence) instead of rebuilt per E.  Per-program VMEM grows with Lc
+(~4.6 MB at BQ=128, Lc=8528, E_max=20), capping library length at a few
+thousand frames.
 
-Grid: one program per query row-block.  Per-program VMEM:
-  Vq block (E_max, BQ) + Vc (E_max, Lc_pad) + slab (BQ, Lc_pad)
-  ~ 4.6 MB for BQ=128, Lc=8528, E_max=20 — fits v5e's 16 MB VMEM.
+STREAMING (``knn_topk_stream_kernel``, DESIGN.md SS8): the grid gains a
+second, minor-most CANDIDATE-TILE dimension.  Each program accumulates a
+(block_q, tile_c) distance tile on-chip from the lag slices and merges it
+into a running (E_max, block_q, k) top-k carried in VMEM scratch across
+tiles, so per-program VMEM is O(E_max*tile_c + block_q*tile_c +
+E_max*block_q*k) — INDEPENDENT of Lc (``stream_block_shapes`` is the
+pure shape function the CI guard asserts on): arbitrary library lengths
+fit a 16 MB VMEM budget.
+
+Shared selection machinery: top-k is a fused k-pass masked argmin on the
+VPU (k = E+1 <= 21); TPU has no radix-sort analogue, and k-pass selection
+is O(k*width) vector work per row versus O(width log width) for a sort.
+Candidate columns are padded to the lane boundary and masked with _BIG.
+Tie rule: argmin picks the first minimum position, which in both layouts
+resolves equal distances to the LOWEST candidate index — the lax.top_k
+rule — so slab, streaming, and the jnp builders agree bit-for-bit
+(see knn_topk_stream_kernel's merge-order note).
+
+Ragged queries: wrappers split the query axis into full ``block_q``
+blocks plus one 8-row-aligned tail block (``_query_splits``), so a ragged
+Lq pays O(8) padded rows of selection work instead of a whole extra
+block.
+
+``dist_dtype`` (EDMConfig.dist_dtype): the distance ACCUMULATOR runs in
+this dtype (bfloat16 halves the tile/slab working set); merge keys and
+output distances are always float32.
 """
 from __future__ import annotations
 
@@ -23,10 +44,92 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# THE shared pinned-rounding accumulate (maximum(sq, 0) FMA guard): one
+# definition for the jnp builders, the kernels, and the ref oracle — the
+# exact float sequence the cross-layout bit-identity contract rests on.
+from repro.core.knn import _acc_sq
 
 _BIG = 3.0e38  # finite +inf stand-in (avoids inf-inf NaNs)
+_IMAX = 2147483647  # python literal: a jnp scalar here would be captured
+# by pallas kernel traces as a constant, which pallas_call rejects.
 
 
+def _query_splits(Lq: int, block_q: int) -> list[tuple[int, int, int]]:
+    """Query-axis work plan: [(row0, rows, block)] — full ``block_q``
+    blocks plus one 8-row-aligned tail block for the ragged remainder
+    (sublane granularity), so padded tail rows cost at most 7 rows of
+    k-pass VPU work instead of a whole extra block."""
+    main = (Lq // block_q) * block_q
+    splits = []
+    if main:
+        splits.append((0, main, block_q))
+    rem = Lq - main
+    if rem:
+        splits.append((main, rem, min(block_q, max(8, -(-rem // 8) * 8))))
+    return splits
+
+
+def _over_query_splits(Vq, block_q, call_split):
+    """Shared wrapper scaffold for both layouts: run ``call_split(Vq_p,
+    row0, rows_pad, bq)`` -> (idx, dist) over the _query_splits plan
+    (padding each split to a block multiple) and stitch the per-split
+    results back along the query axis."""
+    Lq = Vq.shape[1]
+    outs = []
+    for row0, rows, bq in _query_splits(Lq, block_q):
+        rows_pad = pl.cdiv(rows, bq) * bq
+        Vq_p = jnp.pad(
+            Vq[:, row0 : row0 + rows], ((0, 0), (0, rows_pad - rows))
+        )
+        idx, dist = call_split(Vq_p, row0, rows_pad, bq)
+        outs.append((idx[:, :rows], dist[:, :rows]))
+    if len(outs) == 1:
+        return outs[0]
+    return (
+        jnp.concatenate([o[0] for o in outs], axis=1),
+        jnp.concatenate([o[1] for o in outs], axis=1),
+    )
+
+
+def _kpass_select(md, mi, k, width):
+    """Fused k-pass masked-argmin top-k over a (rows, width) buffer.
+
+    md: f32 merge keys; mi: i32 candidate ids per column.  Selected
+    positions are knocked out with +inf (strictly above the _BIG mask
+    value, so an already-taken position can never shadow a real masked
+    candidate).  Returns (ids, dists) each (rows, k), sorted ascending
+    with ties resolved to the earliest buffer position.
+    """
+    rows = md.shape[0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
+
+    def body(kk, carry):
+        md_cur, idxs, dists = carry
+        m = jnp.min(md_cur, axis=1)
+        am = jnp.argmin(md_cur, axis=1).astype(jnp.int32)
+        hit = pos == am[:, None]
+        sel = jnp.min(jnp.where(hit, mi, jnp.full((), _IMAX, jnp.int32)), axis=1)
+        idxs = jax.lax.dynamic_update_index_in_dim(idxs, sel, kk, axis=1)
+        dists = jax.lax.dynamic_update_index_in_dim(dists, m, kk, axis=1)
+        md_cur = jnp.where(hit, jnp.float32(jnp.inf), md_cur)
+        return md_cur, idxs, dists
+
+    _, idxs, dists = jax.lax.fori_loop(
+        0,
+        k,
+        body,
+        (
+            md,
+            jnp.zeros((rows, k), jnp.int32),
+            jnp.zeros((rows, k), jnp.float32),
+        ),
+    )
+    return idxs, dists
+
+
+# ------------------------------------------------------------------ slab
 def knn_topk_kernel(
     vq_ref,
     vc_ref,
@@ -38,43 +141,24 @@ def knn_topk_kernel(
     Lc: int,
     block_q: int,
     exclude_self: bool,
+    row0: int = 0,
+    dist_dtype=jnp.float32,
 ):
     Lc_pad = vc_ref.shape[1]
     qi = pl.program_id(0)
     col_ids = jax.lax.broadcasted_iota(jnp.int32, (block_q, Lc_pad), 1)
     invalid = col_ids >= Lc
     if exclude_self:
-        row_ids = qi * block_q + jax.lax.broadcasted_iota(
+        row_ids = row0 + qi * block_q + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, Lc_pad), 0
         )
         invalid = invalid | (col_ids == row_ids)
 
-    D = jnp.zeros((block_q, Lc_pad), jnp.float32)
+    D = jnp.zeros((block_q, Lc_pad), dist_dtype)
     for e in range(E_max):  # static unroll: E_max <= 20
-        vq = vq_ref[e, :]
-        vc = vc_ref[e, :]
-        D = D + jnp.square(vq[:, None] - vc[None, :])
-        Dm = jnp.where(invalid, _BIG, D)
-
-        def body(kk, carry):
-            Dm_cur, idxs, dists = carry
-            m = jnp.min(Dm_cur, axis=1)
-            am = jnp.argmin(Dm_cur, axis=1).astype(jnp.int32)
-            idxs = jax.lax.dynamic_update_index_in_dim(idxs, am, kk, axis=1)
-            dists = jax.lax.dynamic_update_index_in_dim(dists, m, kk, axis=1)
-            Dm_cur = jnp.where(col_ids == am[:, None], _BIG, Dm_cur)
-            return Dm_cur, idxs, dists
-
-        _, idxs, dists = jax.lax.fori_loop(
-            0,
-            k,
-            body,
-            (
-                Dm,
-                jnp.zeros((block_q, k), jnp.int32),
-                jnp.zeros((block_q, k), jnp.float32),
-            ),
-        )
+        D = _acc_sq(D, vq_ref[e, :], vc_ref[e, :], dist_dtype)
+        Dm = jnp.where(invalid, _BIG, D.astype(jnp.float32))
+        idxs, dists = _kpass_select(Dm, col_ids, k, Lc_pad)
         idx_ref[e] = idxs
         dist_ref[e] = dists
 
@@ -86,38 +170,206 @@ def knn_topk_pallas(
     exclude_self: bool,
     block_q: int = 128,
     interpret: bool = True,
+    dist_dtype=jnp.float32,
 ) -> tuple[jax.Array, jax.Array]:
     """Raw pallas_call wrapper; padding/unpadding handled by ops.knn_topk."""
-    E_max, Lq = Vq.shape
+    E_max = Vq.shape[0]
     Lc = Vc.shape[1]
-    Lq_pad = pl.cdiv(Lq, block_q) * block_q
     Lc_pad = pl.cdiv(Lc, 128) * 128
-    Vq_p = jnp.pad(Vq, ((0, 0), (0, Lq_pad - Lq)))
     Vc_p = jnp.pad(Vc, ((0, 0), (0, Lc_pad - Lc)))
 
-    kernel = functools.partial(
-        knn_topk_kernel,
-        E_max=E_max,
-        k=k,
-        Lc=Lc,
-        block_q=block_q,
-        exclude_self=exclude_self,
+    def call_split(Vq_p, row0, rows_pad, bq):
+        kernel = functools.partial(
+            knn_topk_kernel,
+            E_max=E_max,
+            k=k,
+            Lc=Lc,
+            block_q=bq,
+            exclude_self=exclude_self,
+            row0=row0,
+            dist_dtype=dist_dtype,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(rows_pad // bq,),
+            in_specs=[
+                pl.BlockSpec((E_max, bq), lambda i: (0, i)),
+                pl.BlockSpec((E_max, Lc_pad), lambda i: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((E_max, bq, k), lambda i: (0, i, 0)),
+                pl.BlockSpec((E_max, bq, k), lambda i: (0, i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.int32),
+                jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.float32),
+            ],
+            interpret=interpret,
+        )(Vq_p, Vc_p)
+
+    return _over_query_splits(Vq, block_q, call_split)
+
+
+# ------------------------------------------------------------- streaming
+def stream_block_shapes(
+    E_max: int, k: int, block_q: int, tile_c: int
+) -> dict[str, tuple[int, ...]]:
+    """Per-program block/scratch shapes of the streaming kernel.
+
+    A PURE function of (E_max, k, block_q, tile_c): the library length Lc
+    appears nowhere — it only scales the GRID — which is the flat-VMEM
+    scaling guarantee the CI guard test asserts (tests/test_knn_streaming).
+    ``knn_topk_stream_pallas`` builds its BlockSpecs and scratch from this
+    dict, so the guard constrains the real kernel, not a copy.
+    """
+    return {
+        "vq": (E_max, block_q),
+        "vc_tile": (E_max, tile_c),
+        "out": (E_max, block_q, k),
+        "scratch_idx": (E_max, block_q, k),
+        "scratch_dist": (E_max, block_q, k),
+        "merge": (block_q, k + tile_c),
+    }
+
+
+def stream_vmem_bytes(
+    E_max: int, k: int, block_q: int, tile_c: int, dist_dtype=jnp.float32
+) -> int:
+    """VMEM budget estimate for one streaming program (DESIGN.md SS8):
+    blocks + scratch + the distance tile (dist_dtype) + the f32/i32 merge
+    buffers.  Independent of Lc."""
+    s = stream_block_shapes(E_max, k, block_q, tile_c)
+    n = lambda shp: functools.reduce(lambda a, b: a * b, shp, 1)
+    it = jnp.dtype(dist_dtype).itemsize
+    return (
+        4 * (n(s["vq"]) + n(s["vc_tile"]))  # f32 lag blocks
+        + 4 * (n(s["out"]) * 2)  # idx + dist output blocks
+        + 4 * (n(s["scratch_idx"]) + n(s["scratch_dist"]))
+        + it * block_q * tile_c  # distance tile accumulator
+        + (4 + 4) * n(s["merge"])  # f32 keys + i32 ids
     )
-    idx, dist = pl.pallas_call(
-        kernel,
-        grid=(Lq_pad // block_q,),
-        in_specs=[
-            pl.BlockSpec((E_max, block_q), lambda i: (0, i)),
-            pl.BlockSpec((E_max, Lc_pad), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((E_max, block_q, k), lambda i: (0, i, 0)),
-            pl.BlockSpec((E_max, block_q, k), lambda i: (0, i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((E_max, Lq_pad, k), jnp.int32),
-            jax.ShapeDtypeStruct((E_max, Lq_pad, k), jnp.float32),
-        ],
-        interpret=interpret,
-    )(Vq_p, Vc_p)
-    return idx[:, :Lq], dist[:, :Lq]
+
+
+def knn_topk_stream_kernel(
+    vq_ref,
+    vc_ref,
+    idx_ref,
+    dist_ref,
+    idx_s,
+    dist_s,
+    *,
+    E_max: int,
+    k: int,
+    Lc: int,
+    block_q: int,
+    tile_c: int,
+    exclude_self: bool,
+    row0: int = 0,
+    dist_dtype=jnp.float32,
+):
+    """Grid (query_block, candidate_tile); candidate tiles are minor-most,
+    so the running (E_max, block_q, k) top-k in VMEM scratch accumulates
+    across the tiles of one query block and is flushed to the output block
+    on the last tile.
+
+    Merge order = [running k | tile columns ascending]: running entries
+    hold globally-smaller candidate ids (earlier tiles) in tie-stable
+    order, so the first-minimum-position argmin resolves equal distances
+    to the lowest candidate id — exactly the slab kernel / lax.top_k tie
+    rule, which is what makes streaming bit-identical to slab.  Scratch
+    is seeded with +inf sentinels: strictly worse than every real
+    candidate (masked ones carry the finite _BIG), so a sentinel can only
+    surface in the degenerate k > Lc case the wrappers reject.
+    """
+    qi = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        idx_s[...] = jnp.zeros(idx_s.shape, jnp.int32)
+        dist_s[...] = jnp.full(dist_s.shape, jnp.inf, jnp.float32)
+
+    base = ci * tile_c
+    col_ids = base + jax.lax.broadcasted_iota(jnp.int32, (block_q, tile_c), 1)
+    invalid = col_ids >= Lc
+    if exclude_self:
+        row_ids = row0 + qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, tile_c), 0
+        )
+        invalid = invalid | (col_ids == row_ids)
+
+    D = jnp.zeros((block_q, tile_c), dist_dtype)
+    for e in range(E_max):  # static unroll: E_max <= 20
+        D = _acc_sq(D, vq_ref[e, :], vc_ref[e, :], dist_dtype)
+        Dm = jnp.where(invalid, _BIG, D.astype(jnp.float32))
+        md = jnp.concatenate([dist_s[e], Dm], axis=1)
+        mi = jnp.concatenate([idx_s[e], col_ids], axis=1)
+        idxs, dists = _kpass_select(md, mi, k, k + tile_c)
+        idx_s[e] = idxs
+        dist_s[e] = dists
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _flush():
+        idx_ref[...] = idx_s[...]
+        dist_ref[...] = dist_s[...]
+
+
+def knn_topk_stream_pallas(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    block_q: int = 128,
+    tile_c: int = 512,
+    interpret: bool = True,
+    dist_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw streaming pallas_call wrapper (padding via ops.knn_topk_streaming).
+
+    VMEM per program is stream_vmem_bytes(...) — flat in Lc — so library
+    length is bounded by HBM, not by the 16 MB VMEM budget.
+    """
+    E_max = Vq.shape[0]
+    Lc = Vc.shape[1]
+    if k > Lc:
+        raise ValueError(f"k={k} exceeds candidate count Lc={Lc}")
+    tile_c = max(8, min(tile_c, pl.cdiv(Lc, 8) * 8))
+    n_c = pl.cdiv(Lc, tile_c)
+    Vc_p = jnp.pad(Vc, ((0, 0), (0, n_c * tile_c - Lc)))
+
+    def call_split(Vq_p, row0, rows_pad, bq):
+        shapes = stream_block_shapes(E_max, k, bq, tile_c)
+        kernel = functools.partial(
+            knn_topk_stream_kernel,
+            E_max=E_max,
+            k=k,
+            Lc=Lc,
+            block_q=bq,
+            tile_c=tile_c,
+            exclude_self=exclude_self,
+            row0=row0,
+            dist_dtype=dist_dtype,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(rows_pad // bq, n_c),
+            in_specs=[
+                pl.BlockSpec(shapes["vq"], lambda i, j: (0, i)),
+                pl.BlockSpec(shapes["vc_tile"], lambda i, j: (0, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec(shapes["out"], lambda i, j: (0, i, 0)),
+                pl.BlockSpec(shapes["out"], lambda i, j: (0, i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.int32),
+                jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.float32),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM(shapes["scratch_idx"], jnp.int32),
+                pltpu.VMEM(shapes["scratch_dist"], jnp.float32),
+            ],
+            interpret=interpret,
+        )(Vq_p, Vc_p)
+
+    return _over_query_splits(Vq, block_q, call_split)

@@ -1,16 +1,21 @@
-"""jit'd public wrapper for the knn_topk kernel."""
+"""jit'd public wrappers for the knn_topk kernels (slab + streaming)."""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import default_interpret as _default_interpret
-from repro.kernels.knn_topk.knn_topk import knn_topk_pallas
+from repro.kernels.knn_topk.knn_topk import (
+    knn_topk_pallas,
+    knn_topk_stream_pallas,
+)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "exclude_self", "block_q", "interpret")
+    jax.jit,
+    static_argnames=("k", "exclude_self", "block_q", "dist_dtype", "interpret"),
 )
 def knn_topk(
     Vq: jax.Array,
@@ -18,19 +23,56 @@ def knn_topk(
     k: int,
     exclude_self: bool = False,
     block_q: int = 128,
+    dist_dtype: str = "float32",
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Multi-E kNN tables.
+    """Multi-E kNN tables, SLAB layout (VMEM-resident (block_q, Lc) slab).
 
     Vq: (E_max, Lq) query lag matrix, Vc: (E_max, Lc) candidates.
     Returns (idx, sq_dists) each (E_max, Lq, k): for every embedding
     dimension E=e+1, the k nearest candidates under the dimension-E
-    delay-embedding distance.
+    delay-embedding distance.  dist_dtype: distance-accumulator dtype
+    (EDMConfig.dist_dtype; bfloat16 halves the slab working set, merge
+    keys stay float32).
     """
     if exclude_self and Vq.shape != Vc.shape:
         raise ValueError("exclude_self requires query set == candidate set")
     if interpret is None:
         interpret = _default_interpret()
     return knn_topk_pallas(
-        Vq, Vc, k, exclude_self, block_q=block_q, interpret=interpret
+        Vq, Vc, k, exclude_self, block_q=block_q, interpret=interpret,
+        dist_dtype=jnp.dtype(dist_dtype),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "exclude_self", "block_q", "tile_c", "dist_dtype", "interpret"
+    ),
+)
+def knn_topk_streaming(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool = False,
+    block_q: int = 128,
+    tile_c: int = 512,
+    dist_dtype: str = "float32",
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-E kNN tables, STREAMING layout (DESIGN.md SS8).
+
+    Same contract and bit-identical output to :func:`knn_topk`, but the
+    grid streams candidate tiles of width ``tile_c`` through a running
+    VMEM top-k, so per-program VMEM is independent of the library length
+    (see knn_topk.stream_vmem_bytes) and arbitrary Lc fits the chip.
+    """
+    if exclude_self and Vq.shape != Vc.shape:
+        raise ValueError("exclude_self requires query set == candidate set")
+    if interpret is None:
+        interpret = _default_interpret()
+    return knn_topk_stream_pallas(
+        Vq, Vc, k, exclude_self, block_q=block_q, tile_c=tile_c,
+        interpret=interpret, dist_dtype=jnp.dtype(dist_dtype),
     )

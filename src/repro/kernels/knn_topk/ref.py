@@ -26,9 +26,13 @@ def knn_topk_ref(
         else jnp.zeros((Lq, Lc), bool)
     )
 
+    from repro.core.knn import _acc_sq
+
     def step(D, vs):
         vq, vc = vs
-        D = D + jnp.square(vq[:, None] - vc[None, :])
+        # Same pinned square-then-add rounding (FMA guard) as the kernels
+        # and the core builders — one shared definition.
+        D = _acc_sq(D, vq, vc, jnp.float32)
         Dm = jnp.where(self_mask, jnp.inf, D)
         neg_d, idx = jax.lax.top_k(-Dm, k)
         return D, (idx.astype(jnp.int32), -neg_d)
@@ -37,3 +41,22 @@ def knn_topk_ref(
         step, jnp.zeros((Lq, Lc), jnp.float32), (Vq, Vc)
     )
     return indices, sq_dists
+
+
+def knn_topk_stream_ref(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    tile_c: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the STREAMING kernel: the core candidate-tiled builder
+    (core/knn.py), which carries the same running-top-k merge in a
+    lax.scan and is itself bit-identical to the slab builders — so the
+    streaming kernel is checked against an independently-tiled
+    implementation, not a copy of its own merge."""
+    from repro.core import knn
+
+    return knn.knn_tables_all_E_streaming(
+        Vq, Vc, k, exclude_self=exclude_self, tile_c=tile_c
+    )

@@ -50,6 +50,13 @@ def main():
         help="execution backend (repro.engine registry; default: reference)",
     )
     ap.add_argument(
+        "--knn-tile", type=int, default=0,
+        help="kNN selection layout (DESIGN.md SS8): 0 = auto (slab below "
+        "the threshold, streaming above), > 0 = streaming candidate tiles "
+        "of this width (distance working set flat in library length), "
+        "-1 = force the slab path; output is bit-identical either way",
+    )
+    ap.add_argument(
         "--no-bucketed", action="store_true",
         help="disable optE-bucketed phase 2 (all-E tables; A/B baseline)",
     )
@@ -80,6 +87,7 @@ def main():
         E_max=args.e_max, tau=args.tau, lib_block=args.lib_block,
         engine=engine, bucketed=not args.no_bucketed,
         stream_depth=args.stream_depth, target_tile=args.target_tile,
+        knn_tile_c=args.knn_tile,
     )
     t0 = time.time()
     result = run_causal_inference(ts, cfg, out_dir=args.out, progress=True)
@@ -97,6 +105,7 @@ def main():
         "n_buckets": int(n_buckets),
         "stream_depth": cfg.stream_depth,
         "target_tile": cfg.target_tile,
+        "knn_tile_c": cfg.knn_tile_c,
     }
     # The pipeline already assembled the map into <out>/causal_map/data.npy
     # (memmap; no dense host copy) — only the zarr-lite meta is missing.

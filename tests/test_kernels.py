@@ -36,6 +36,32 @@ def test_knn_topk_vs_oracle(E_max, Lq, Lc, k, exclude_self):
     np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize(
+    "E_max,Lq,Lc,k,exclude_self,tile_c",
+    [
+        (4, 100, 100, 5, True, 48),
+        (6, 200, 150, 7, False, 64),
+        (20, 130, 130, 21, True, 64),  # paper-scale E_max and k
+    ],
+)
+def test_knn_topk_streaming_vs_oracle(E_max, Lq, Lc, k, exclude_self, tile_c):
+    """The streaming (candidate-tiled, Lc-independent VMEM) kernel against
+    the slab oracle; full tie/merge coverage is in test_knn_streaming.py."""
+    from repro.kernels.knn_topk.ops import knn_topk_streaming
+
+    rng = np.random.default_rng(E_max * 1000 + Lq)
+    Vq = jnp.asarray(rng.standard_normal((E_max, Lq)), jnp.float32)
+    Vc = Vq if exclude_self else jnp.asarray(
+        rng.standard_normal((E_max, Lc)), jnp.float32
+    )
+    idx, d = knn_topk_streaming(
+        Vq, Vc, k, exclude_self=exclude_self, block_q=64, tile_c=tile_c
+    )
+    ridx, rd = knn_topk_ref(Vq, Vc, k, exclude_self)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-5)
+
+
 def test_knn_topk_sorted_and_self_excluded():
     rng = np.random.default_rng(7)
     V = jnp.asarray(rng.standard_normal((4, 90)), jnp.float32)

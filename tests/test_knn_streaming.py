@@ -1,0 +1,335 @@
+"""Streaming candidate-tiled kNN selection (DESIGN.md SS8).
+
+Contracts under test:
+  * streaming == slab BIT-identity (idx AND float32 distances) on both
+    the jnp builders and the Pallas kernels, for tile widths that do and
+    do not divide Lc — including the tie-heavy duplicate/dead-neuron
+    cases (the PR 2 simplex_weights d1~0 regime);
+  * the streaming kernel's per-program block/scratch shapes are a pure
+    function of (E_max, k, block_q, tile_c) — INDEPENDENT of Lc (the
+    VMEM-budget CI guard);
+  * the library-sharded builder + host-side merge reproduce the
+    unsharded table bit-for-bit;
+  * EDMConfig.knn_tile_c routing (auto threshold / force) is shared by
+    every engine and invisible in the causal map.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import EDMConfig, ccm_matrix, knn, simplex_batch
+from repro.data.synthetic import dummy_brain
+
+
+def _rand_V(E, L, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((E, L)), jnp.float32)
+
+
+# ------------------------------------------------------- jnp builders
+@pytest.mark.parametrize(
+    "Lq,Lc,E,k,exclude_self,tile_c",
+    [
+        (130, 130, 8, 9, True, 48),   # non-dividing tile
+        (128, 128, 6, 7, True, 32),   # dividing tile
+        (100, 257, 5, 6, False, 64),  # rectangular, non-dividing
+        (50, 300, 5, 6, False, 300),  # single tile == slab width
+        (60, 60, 4, 60, True, 16),    # k == Lc (masked self selected)
+    ],
+)
+def test_streaming_bit_identical_to_slab(Lq, Lc, E, k, exclude_self, tile_c):
+    Vq = _rand_V(E, Lq, Lq * 1000 + Lc)
+    Vc = Vq if exclude_self else _rand_V(E, Lc, Lc)
+    i0, d0 = knn.knn_tables_all_E(Vq, Vc, k, exclude_self, impl="unroll")
+    i1, d1 = knn.knn_tables_all_E_streaming(
+        Vq, Vc, k, exclude_self, tile_c=tile_c
+    )
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("tile_c", [32, 48])  # dividing / non-dividing of 96
+def test_streaming_ties_dead_and_duplicate_neurons(tile_c):
+    """All-tied rows (dead series: every distance exactly 0) and duplicate
+    candidates must resolve ties identically in the tiled merge and
+    lax.top_k — the d1~0 simplex_weights regime from PR 2."""
+    # dead neuron: constant series -> V all equal -> D == 0 everywhere
+    Vdead = jnp.zeros((5, 96), jnp.float32)
+    i0, d0 = knn.knn_tables_all_E(Vdead, Vdead, 6, True, impl="unroll")
+    i1, d1 = knn.knn_tables_all_E_streaming(Vdead, Vdead, 6, True, tile_c=tile_c)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    # ties resolve to the LOWEST candidate id (self masked out)
+    assert np.asarray(i1)[0, 0, :3].tolist() == [1, 2, 3]
+    assert np.all(np.asarray(d1) == 0.0)
+
+    # duplicate neurons: pairs of identical candidate columns
+    rng = np.random.default_rng(7)
+    half = jnp.asarray(rng.standard_normal((5, 48)), jnp.float32)
+    Vdup = jnp.concatenate([half, half], axis=1)  # cols j and j+48 identical
+    i0, d0 = knn.knn_tables_all_E(Vdup, Vdup, 7, True, impl="unroll")
+    i1, d1 = knn.knn_tables_all_E_streaming(Vdup, Vdup, 7, True, tile_c=tile_c)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    # each query's zero-distance duplicate is found, lowest-id first
+    assert np.all(np.asarray(d1)[:, :, 0] == 0.0)
+
+
+def test_streaming_bucketed_bit_identical(tile_sizes=(33, 70, 140)):
+    V = _rand_V(8, 140, 2)
+    buckets = (2, 5, 8)
+    i0, d0 = knn.knn_tables_bucketed(V, V, 9, True, buckets)
+    for tc in tile_sizes:
+        i1, d1 = knn.knn_tables_bucketed_streaming(
+            V, V, 9, True, buckets, tile_c=tc
+        )
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_streaming_counts_table_rows():
+    knn.reset_table_counters()
+    V = _rand_V(6, 90, 3)
+    knn.knn_tables_all_E_streaming(V, V, 7, True, tile_c=30)
+    assert knn.TABLE_ROWS_BUILT["all_E"] == 6
+    knn.knn_tables_bucketed_streaming(V, V, 7, True, (2, 6), tile_c=30)
+    assert knn.TABLE_ROWS_BUILT["bucketed"] == 2
+    knn.reset_table_counters()
+
+
+def test_streaming_rejects_bad_args():
+    V = _rand_V(4, 50, 4)
+    with pytest.raises(ValueError, match="exceeds candidate count"):
+        knn.knn_tables_all_E_streaming(V, V, 51, True, tile_c=16)
+    with pytest.raises(ValueError, match="ascending"):
+        knn.knn_tables_bucketed_streaming(V, V, 5, True, (3, 2), tile_c=16)
+
+
+# ------------------------------------------------------ pallas kernels
+@pytest.mark.parametrize(
+    "E,Lq,Lc,k,exclude_self,block_q,tile_c",
+    [
+        (4, 100, 100, 5, True, 64, 48),    # ragged Lq tail, non-dividing tile
+        (6, 128, 192, 7, False, 64, 64),   # dividing everything
+        (3, 129, 257, 4, False, 64, 100),  # ragged both axes
+    ],
+)
+def test_stream_kernel_bit_identical_to_slab_kernel(
+    E, Lq, Lc, k, exclude_self, block_q, tile_c
+):
+    from repro.kernels.knn_topk.ops import knn_topk, knn_topk_streaming
+
+    Vq = _rand_V(E, Lq, E * 100 + Lq)
+    Vc = Vq if exclude_self else _rand_V(E, Lc, Lc + 1)
+    i_sl, d_sl = knn_topk(Vq, Vc, k, exclude_self=exclude_self, block_q=block_q)
+    i_st, d_st = knn_topk_streaming(
+        Vq, Vc, k, exclude_self=exclude_self, block_q=block_q, tile_c=tile_c
+    )
+    np.testing.assert_array_equal(np.asarray(i_sl), np.asarray(i_st))
+    np.testing.assert_array_equal(np.asarray(d_sl), np.asarray(d_st))
+
+
+def test_stream_kernel_vs_streaming_oracle():
+    from repro.kernels.knn_topk.ops import knn_topk_streaming
+    from repro.kernels.knn_topk.ref import knn_topk_stream_ref
+
+    V = _rand_V(6, 150, 11)
+    idx, d = knn_topk_streaming(V, V, 7, exclude_self=True, block_q=64, tile_c=40)
+    ridx, rd = knn_topk_stream_ref(V, V, 7, exclude_self=True, tile_c=64)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-5)
+
+
+def test_stream_kernel_ties_match_slab_kernel():
+    from repro.kernels.knn_topk.ops import knn_topk, knn_topk_streaming
+
+    V = jnp.zeros((5, 90), jnp.float32)  # dead neuron: all ties
+    i_sl, d_sl = knn_topk(V, V, 6, exclude_self=True, block_q=32)
+    i_st, d_st = knn_topk_streaming(V, V, 6, exclude_self=True, block_q=32, tile_c=24)
+    np.testing.assert_array_equal(np.asarray(i_sl), np.asarray(i_st))
+    np.testing.assert_array_equal(np.asarray(d_sl), np.asarray(d_st))
+
+
+def test_dist_dtype_bf16_reaches_kernels():
+    """EDMConfig.dist_dtype is honoured by the Pallas kernels (bf16 tile
+    accumulation, float32 merge keys): slab and streaming stay mutually
+    bit-identical under bf16, and bf16 actually changes the numerics
+    (proof it reached the accumulator, not a silently ignored knob)."""
+    from repro.kernels.knn_topk.ops import knn_topk, knn_topk_streaming
+
+    V = _rand_V(6, 120, 13)
+    i_sl, d_sl = knn_topk(V, V, 7, exclude_self=True, block_q=64,
+                          dist_dtype="bfloat16")
+    i_st, d_st = knn_topk_streaming(V, V, 7, exclude_self=True, block_q=64,
+                                    tile_c=40, dist_dtype="bfloat16")
+    np.testing.assert_array_equal(np.asarray(i_sl), np.asarray(i_st))
+    np.testing.assert_array_equal(np.asarray(d_sl), np.asarray(d_st))
+    assert d_sl.dtype == jnp.float32  # merge keys / outputs stay f32
+    _, d_f32 = knn_topk(V, V, 7, exclude_self=True, block_q=64)
+    assert not np.array_equal(np.asarray(d_f32), np.asarray(d_sl))
+    # bf16 distances agree with f32 to bf16 resolution
+    np.testing.assert_allclose(
+        np.asarray(d_f32), np.asarray(d_sl), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_ragged_tail_split_covers_all_queries():
+    """_query_splits: full blocks + one 8-aligned tail block; outputs for
+    every query row match the unsplit reference (the padded-query waste
+    fix must not change results)."""
+    from repro.kernels.knn_topk.knn_topk import _query_splits
+    from repro.kernels.knn_topk.ops import knn_topk
+    from repro.kernels.knn_topk.ref import knn_topk_ref
+
+    assert _query_splits(256, 128) == [(0, 256, 128)]
+    assert _query_splits(130, 128) == [(0, 128, 128), (128, 2, 8)]
+    assert _query_splits(50, 128) == [(0, 50, 56)]
+    for Lq in (130, 50, 255):
+        V = _rand_V(4, Lq, Lq)
+        idx, d = knn_topk(V, V, 5, exclude_self=True, block_q=128)
+        ridx, rd = knn_topk_ref(V, V, 5, True)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+        np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------- CI guard: VMEM
+def test_stream_kernel_blocks_independent_of_Lc():
+    """CI guard: the streaming kernel's per-program block/scratch shapes
+    and VMEM budget are a pure function of (E_max, k, block_q, tile_c) —
+    the library length only scales the grid.  stream_block_shapes is the
+    SAME function knn_topk_stream_pallas builds its BlockSpecs from."""
+    from repro.kernels.knn_topk.knn_topk import (
+        stream_block_shapes,
+        stream_vmem_bytes,
+    )
+
+    shapes = stream_block_shapes(20, 21, 128, 512)
+    import inspect
+    sig = inspect.signature(stream_block_shapes)
+    assert "Lc" not in sig.parameters  # shape function cannot even see Lc
+    assert shapes["vc_tile"] == (20, 512)
+    assert shapes["scratch_idx"] == (20, 128, 21)
+    # paper-scale budget: E_max=20, k=21, block_q=128, tile_c=512 fits
+    # a 16 MB VMEM with generous headroom, at ANY library length
+    assert stream_vmem_bytes(20, 21, 128, 512) < 4 * 2**20
+    # slab VMEM, by contrast, grows linearly in Lc and busts the budget
+    assert knn.slab_bytes(128, 8528) + 8528 * 20 * 4 > 4 * 2**20
+    # the jnp streaming working-set model takes no Lc parameter either
+    # (structural flatness); pin its concrete value so the model cannot
+    # silently grow a hidden Lc term
+    assert "Lc" not in inspect.signature(knn.streaming_bytes).parameters
+    assert knn.streaming_bytes(128, 21, 512, 20) < 4 * 2**20
+
+
+def test_resolve_knn_tile_thresholds():
+    assert knn.resolve_knn_tile(1000, 0) == 0  # auto: small -> slab
+    assert knn.resolve_knn_tile(knn.SLAB_AUTO_MAX_LC + 1, 0) == (
+        knn.STREAM_DEFAULT_TILE_C
+    )
+    assert knn.resolve_knn_tile(100, -1) == 0  # forced slab
+    assert knn.resolve_knn_tile(100, 64) == 64  # forced streaming
+    with pytest.raises(ValueError, match="knn_tile_c"):
+        EDMConfig(knn_tile_c=-2)
+
+
+# ------------------------------------------------- library sharding
+def test_merge_shard_tables_bit_identical():
+    """Per-shard top-k + host merge == unsharded table, bit for bit,
+    across shard counts (including shards narrower than k)."""
+    rng = np.random.default_rng(17)
+    Vq = jnp.asarray(rng.standard_normal((6, 120)), jnp.float32)
+    i0, d0 = knn.knn_tables_all_E(Vq, Vq, 7, True, impl="unroll")
+    for S in (2, 3, 5):
+        shard = -(-120 // S)
+        parts = [
+            knn.knn_tables_all_E_streaming(
+                Vq, Vq[:, s * shard : min((s + 1) * shard, 120)],
+                min(7, shard), True, tile_c=16,
+                col_offset=s * shard, col_hi=min((s + 1) * shard, 120),
+            )
+            for s in range(S)
+        ]
+        mi, md = knn.merge_shard_tables(
+            [p[0] for p in parts], [p[1] for p in parts], k=7
+        )
+        np.testing.assert_array_equal(mi, np.asarray(i0))
+        np.testing.assert_array_equal(md, np.asarray(d0))
+
+
+def test_library_sharded_pipeline_builder():
+    """The shard_map-backed builder (local mesh) == slab table."""
+    from repro.core.pipeline import knn_tables_library_sharded
+
+    Vq = _rand_V(5, 110, 23)
+    cfg = EDMConfig(E_max=5)
+    mi, md = knn_tables_library_sharded(Vq, Vq, 6, cfg, exclude_self=True)
+    i0, d0 = knn.knn_tables_all_E(Vq, Vq, 6, True, impl="unroll")
+    np.testing.assert_array_equal(mi, np.asarray(i0))
+    np.testing.assert_array_equal(md, np.asarray(d0))
+
+
+def test_library_sharded_multi_device():
+    """4 fake devices: each selects over its candidate shard, the host
+    merge reproduces the unsharded table bit-for-bit (subprocess — the
+    in-process suite must see the real single CPU device)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import EDMConfig, knn
+        from repro.core.pipeline import knn_tables_library_sharded
+
+        assert len(jax.devices()) == 4
+        rng = np.random.default_rng(31)
+        Vq = jnp.asarray(rng.standard_normal((5, 130)), jnp.float32)
+        cfg = EDMConfig(E_max=5, knn_tile_c=16)  # force streaming shards
+        mi, md = knn_tables_library_sharded(Vq, Vq, 6, cfg, exclude_self=True)
+        i0, d0 = knn.knn_tables_all_E(Vq, Vq, 6, True, impl="unroll")
+        np.testing.assert_array_equal(mi, np.asarray(i0))
+        np.testing.assert_array_equal(md, np.asarray(d0))
+        print("sharded-4dev == unsharded: OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=600, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+# --------------------------------------------------- engine routing
+@pytest.mark.parametrize("engine", ["reference", "pallas-interpret"])
+def test_causal_map_invariant_under_knn_tile(engine):
+    """Forced streaming (dividing and non-dividing tiles) and forced slab
+    produce the SAME causal map on both engines — the acceptance bit."""
+    ts = jnp.asarray(dummy_brain(10, 260, seed=21))
+    base = EDMConfig(E_max=4, engine=engine)
+    _, optE = simplex_batch(ts, EDMConfig(E_max=4))
+    rho_slab = np.asarray(
+        ccm_matrix(ts, optE, EDMConfig(E_max=4, engine=engine, knn_tile_c=-1))
+    )
+    for tile in (32, 37):  # divides / does not divide Lp
+        rho_t = np.asarray(
+            ccm_matrix(
+                ts, optE, EDMConfig(E_max=4, engine=engine, knn_tile_c=tile)
+            )
+        )
+        np.testing.assert_array_equal(rho_slab, rho_t)
+    del base
+
+
+def test_phase1_invariant_under_knn_tile():
+    """Phase 1 (simplex sweep) also routes through the streaming builders
+    unchanged: optE and rhos identical under forced streaming."""
+    ts = jnp.asarray(dummy_brain(8, 240, seed=29))
+    r0, e0 = simplex_batch(ts, EDMConfig(E_max=4, knn_tile_c=-1))
+    r1, e1 = simplex_batch(ts, EDMConfig(E_max=4, knn_tile_c=41))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
