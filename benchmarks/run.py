@@ -531,6 +531,79 @@ def knn_selection_bench(Lc_sweep=(1000, 2000, 4000), Lq=128, N=128,
     return out
 
 
+# ------------------------------------------------- significance bench (SS9)
+def significance_bench(N=128, L=1000, E_max=20, rows=8, n_sizes=6):
+    """BENCH_significance.json (DESIGN.md SS9): ONE-sweep prefix-snapshot
+    convergence table build vs the old-style per-size rebuild at the
+    128x1000 reference workload.
+
+    Times the convergence-table construction for one ``rows``-row library
+    chunk (the pipeline's dispatch unit) with the REAL bucket set from
+    phase 1 and a paper-style grid of ``n_sizes`` nested library sizes:
+    the rebuild sweeps sum(lib_sizes) candidate columns, the one-sweep
+    snapshot only max(lib_sizes) — the measured speedup should track
+    that ratio.  Chunk times are extrapolated to the full N-row workload
+    (both variants scale linearly in rows).
+    """
+    from repro.core import knn, lag_matrix, make_bucket_plan
+    from repro.inference import subsample_permutation
+
+    cfg = EDMConfig(E_max=E_max)
+    ts = jnp.asarray(dummy_brain(N, L, seed=5))
+    _, optE = simplex_batch(ts, cfg)
+    plan, _ = make_bucket_plan(np.asarray(optE))
+    Lp = cfg.n_points(L)
+    kb = plan.buckets[-1] + 1
+    lib_sizes = tuple(
+        int(s) for s in np.linspace(max(kb + 1, Lp // 8), Lp, n_sizes)
+    )
+    perm = subsample_permutation(jax.random.PRNGKey(0), Lp)
+    tile = knn.STREAM_DEFAULT_TILE_C
+    rows_j = ts[:rows]
+
+    def build(fn):
+        def per_row(x):
+            V = lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+            return fn(
+                V, V, kb, cfg.exclude_self, plan.buckets, lib_sizes, tile,
+                jnp.float32, perm,
+            )
+
+        return jax.jit(jax.vmap(per_row))
+
+    one_sweep = build(knn.knn_tables_prefix_streaming)
+    rebuild = build(knn.knn_tables_prefix_rebuild)
+    t_one = _time(lambda: one_sweep(rows_j), reps=1)
+    t_reb = _time(lambda: rebuild(rows_j), reps=1)
+
+    # identical tables is part of the contract the bench compares under
+    a, b = one_sweep(rows_j), rebuild(rows_j)
+    assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+    speedup = t_reb / t_one
+    row("significance_one_sweep_chunk", t_one,
+        f"N={N};L={L};rows={rows};S={n_sizes}")
+    row("significance_rebuild_chunk", t_reb, f"speedup={speedup:.2f}x")
+    out = {
+        "bench": "significance_convergence_build",
+        "workload": {"N": N, "L": L, "E_max": E_max, "Lp": Lp},
+        "rows_timed": rows,
+        "lib_sizes": list(lib_sizes),
+        "n_buckets": len(plan.buckets),
+        "k": kb,
+        "tile_c": tile,
+        "one_sweep_chunk_s": t_one,
+        "rebuild_chunk_s": t_reb,
+        "one_sweep_full_N_s": t_one * N / rows,
+        "rebuild_full_N_s": t_reb * N / rows,
+        "speedup": speedup,
+        "candidate_cols_ratio": sum(lib_sizes) / lib_sizes[-1],
+    }
+    (REPO / "BENCH_significance.json").write_text(json.dumps(out, indent=2))
+    return out
+
+
 # ------------------------------------------------------------------ roofline
 def roofline_summary():
     d = RESULTS / "dryrun"
@@ -560,6 +633,7 @@ BENCHES = {
     "fig3": fig3_strong_scaling,
     "phase2": phase2_engine_bench,
     "knn": knn_selection_bench,
+    "significance": significance_bench,
     "roofline": roofline_summary,
 }
 

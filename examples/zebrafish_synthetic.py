@@ -12,6 +12,11 @@
    it continues from the last completed block).
 4. Score the inferred causal map against the ground-truth network (AUC),
    reproducing the paper's scientific claim (Fig. 10 E/F) in miniature.
+5. Turn the raw rho map into a SIGNIFICANCE-MASKED causal graph
+   (DESIGN.md SS9): one-sweep convergence CCM, phase-randomized
+   surrogate nulls, and a BH-FDR edge mask — the statistically
+   defensible version of step 4's threshold-free ranking — and score
+   the surviving edges against the ground truth.
 """
 import argparse
 import pathlib
@@ -27,6 +32,7 @@ from repro.core.pipeline import run_causal_inference
 from repro.core.types import EDMConfig
 from repro.data import store
 from repro.data.synthetic import logistic_network
+from repro.inference import SignificanceConfig, run_significance
 
 
 def main():
@@ -34,6 +40,8 @@ def main():
     ap.add_argument("--neurons", type=int, default=48)
     ap.add_argument("--steps", type=int, default=600)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--surrogates", type=int, default=99)
+    ap.add_argument("--fdr", type=float, default=0.1)
     args = ap.parse_args()
 
     out = args.out or tempfile.mkdtemp(prefix="zebrafish_")
@@ -45,15 +53,16 @@ def main():
     store.save_dataset(pathlib.Path(out) / "recording", ts,
                        {"species": "synthetic zebrafish", "hz": 2})
 
-    print(f"[2/4] running causal inference pipeline -> {out}")
+    print(f"[2/5] running causal inference pipeline -> {out}")
+    cfg = EDMConfig(E_max=8)
     t0 = time.time()
     result = run_causal_inference(
-        ts, EDMConfig(E_max=8), out_dir=str(pathlib.Path(out) / "causal_map"),
+        ts, cfg, out_dir=str(pathlib.Path(out) / "causal_map"),
         progress=True,
     )
     dt = time.time() - t0
     n = args.neurons
-    print(f"[3/4] {n}x{n} causal map in {dt:.1f}s "
+    print(f"[3/5] {n}x{n} causal map in {dt:.1f}s "
           f"({n * n / dt:.0f} cross-maps/s); mean optimal E = {result.optE.mean():.1f}")
 
     # score: does rho separate true edges from non-edges?
@@ -62,8 +71,35 @@ def main():
     pos, neg = rho[adj], rho[(~adj) & mask]
     order = np.concatenate([pos, neg]).argsort().argsort()
     auc = (order[: len(pos)].mean() + 1 - (len(pos) + 1) / 2) / len(neg)
-    print(f"[4/4] edge-recovery AUC = {auc:.3f} "
+    print(f"[4/5] edge-recovery AUC = {auc:.3f} "
           f"(true-edge mean rho {pos.mean():.3f} vs non-edge {neg.mean():.3f})")
+
+    # significance-masked causal graph: convergence CCM + surrogate nulls
+    # + BH-FDR (DESIGN.md SS9) — the defensible cut of the rho ranking.
+    Lp = cfg.n_points(ts.shape[1])
+    # keep the grid ascending/distinct for any --steps: fixed small sizes
+    # strictly below the near-full top size
+    lib_sizes = tuple(
+        s for s in (40, 100, 250) if s < Lp - 20
+    ) + (Lp - 20,)
+    sig = SignificanceConfig(
+        lib_sizes=lib_sizes, n_surrogates=args.surrogates, alpha=args.fdr,
+        surrogate="phase", seed=7,
+    )
+    t0 = time.time()
+    graph = run_significance(
+        ts, np.asarray(result.optE), np.asarray(result.rho),
+        cfg, sig, out_dir=out, progress=False,
+    )
+    e = graph.edges
+    hits = adj[e["src"], e["dst"]]
+    n_true = int(adj.sum())
+    prec = hits.mean() if len(e) else float("nan")
+    print(f"[5/5] significance-masked graph in {time.time() - t0:.1f}s: "
+          f"{len(e)} edges at FDR {args.fdr} "
+          f"({args.surrogates} phase surrogates, p* = {graph.p_threshold:.4g}); "
+          f"precision {prec:.2f}, recall {hits.sum() / n_true:.2f} "
+          f"vs {n_true} true edges -> {out}/edges")
 
 
 if __name__ == "__main__":

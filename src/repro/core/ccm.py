@@ -49,7 +49,7 @@ import numpy as np
 
 from repro import engine as engines
 from repro.core import embedding, knn
-from repro.core.stats import pearson, simplex_weights
+from repro.core.stats import pearson
 from repro.core.types import EDMConfig
 
 
@@ -432,25 +432,27 @@ def ccm_convergence(
     cfg: EDMConfig,
     key: jax.Array,
 ) -> jax.Array:
-    """Convergence diagnostic (the subsampling test the paper's hot path
-    skips, SSIII-A): rho of cross-mapping y from x at increasing library
-    sizes.  True causation shows rho increasing with library size.
+    """DEPRECATED: convergence diagnostic, kept as a thin same-signature
+    wrapper over the batched prefix-snapshot path
+    (:func:`repro.inference.convergence.ccm_convergence_pair`).
+
+    The old body rebuilt a full kNN table per library size (S full
+    sweeps per pair); the new path snapshots ONE candidate sweep at each
+    prefix boundary (DESIGN.md SS9).  Libraries are now NESTED random
+    subsamples — prefixes of the key-seeded permutation — instead of
+    independent per-size draws, so per-size rho values differ from the
+    old implementation while the convergence behaviour (rho increasing
+    with library size under true causation) is unchanged.
     """
-    L = x.shape[0]
-    Lp = cfg.n_points(L)
-    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
-    y_fut = embedding.future_values(y, cfg.E_max, cfg.tau, cfg.Tp, Lp)
-    rhos = []
-    for i, Ls in enumerate(lib_sizes):
-        sub = jax.random.choice(
-            jax.random.fold_in(key, i), Lp, shape=(Ls,), replace=False
-        )
-        member = jnp.zeros((Lp,), bool).at[sub].set(True)
-        idx, sqd = knn.knn_table_single_E(
-            V, V, E, cfg.k_max, exclude_self=cfg.exclude_self,
-            candidate_mask=member,
-        )
-        w = simplex_weights(sqd, E + 1)
-        pred = knn.simplex_forecast(idx, w, y_fut)
-        rhos.append(pearson(y_fut, pred))
-    return jnp.stack(rhos)
+    import warnings
+
+    warnings.warn(
+        "ccm_convergence is deprecated; use "
+        "repro.inference.convergence.ccm_convergence_pair (per-pair) or "
+        "repro.inference.run_significance (whole-map) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.inference.convergence import ccm_convergence_pair
+
+    return ccm_convergence_pair(x, y, E, tuple(lib_sizes), cfg, key)

@@ -414,6 +414,184 @@ def knn_tables_bucketed_streaming(
     )
 
 
+# --------------------------------------- prefix-snapshot path (DESIGN SS9)
+def _check_prefix_args(
+    Lq: int, Lc: int, k: int, exclude_self: bool,
+    buckets: tuple[int, ...], lib_sizes: tuple[int, ...], E_rows: int,
+    col_ids,
+) -> None:
+    if not buckets or list(buckets) != sorted(set(buckets)):
+        raise ValueError(f"buckets must be ascending and distinct: {buckets}")
+    if buckets[-1] > E_rows:
+        raise ValueError(f"bucket E {buckets[-1]} exceeds lag rows {E_rows}")
+    if not lib_sizes or list(lib_sizes) != sorted(set(lib_sizes)):
+        raise ValueError(
+            f"lib_sizes must be ascending and distinct: {lib_sizes}"
+        )
+    if lib_sizes[-1] > Lc:
+        raise ValueError(
+            f"lib_sizes[-1]={lib_sizes[-1]} exceeds candidate count Lc={Lc}"
+        )
+    # Every query row must find k REAL neighbours inside the smallest
+    # library; with self-exclusion one prefix column may be the query
+    # itself, so one extra candidate is required.
+    need = k + 1 if exclude_self else k
+    if lib_sizes[0] < need:
+        raise ValueError(
+            f"lib_sizes[0]={lib_sizes[0]} too small for k={k} neighbours"
+            + (" with self-exclusion" if exclude_self else "")
+            + "; raise the smallest library size or shrink k"
+        )
+    if exclude_self and col_ids is None and Lq != Lc:
+        raise ValueError("exclude_self requires query set == candidate set")
+
+
+def _prefix_tile_bounds(
+    lib_sizes: tuple[int, ...], tile_c: int
+) -> list[tuple[int, int]]:
+    """Candidate-tile [start, stop) spans covering [0, lib_sizes[-1]) that
+    never CROSS a library-size boundary, so the running carry after the
+    tile ending at each boundary IS that prefix's table."""
+    bounds = []
+    lo = 0
+    for hi in lib_sizes:
+        for s in range(lo, hi, tile_c):
+            bounds.append((s, min(s + tile_c, hi)))
+        lo = hi
+    return bounds
+
+
+def knn_tables_prefix_streaming(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    buckets: tuple[int, ...],
+    lib_sizes: tuple[int, ...],
+    tile_c: int,
+    dist_dtype=jnp.float32,
+    col_ids: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """ONE-sweep prefix-snapshot kNN tables (DESIGN.md SS9).
+
+    Returns (idx, sq_dists), each (S, len(buckets), Lq, k) where
+    S = len(lib_sizes): slice s holds, for every bucket dimension, the
+    top-k table restricted to candidate COLUMNS [0, lib_sizes[s]) — the
+    nested library prefixes of the CCM convergence diagnostic — built in
+    a single candidate sweep by snapshotting the streaming running carry
+    at each prefix boundary (vs S full per-size rebuilds).
+
+    Tiles are the streaming merge of SS8 with boundaries clipped so no
+    tile crosses a prefix edge; the carry after the tile ending at
+    lib_sizes[s] is exactly the table a from-scratch build over the first
+    lib_sizes[s] columns produces (same per-element accumulation order,
+    same lowest-position tie rule), so snapshots are BIT-IDENTICAL to
+    independently built per-size tables (:func:`knn_tables_prefix_rebuild`).
+
+    ``col_ids``: optional (Lc,) int32 candidate PERMUTATION: position j
+    of the sweep order holds candidate COLUMN col_ids[j] of Vc, so the
+    size-Ls library is the random subset {col_ids[0], ..., col_ids[Ls-1]}
+    — the seeded nested subsampling of the convergence diagnostic.  The
+    builder gathers the permuted columns tile by tile; emitted indices
+    are ORIGINAL candidate ids, directly usable against unpermuted
+    target futures, and ``exclude_self`` masks col_ids[j] == query row.
+    None = natural order (ids = positions).
+    """
+    E_rows, Lq = Vq.shape
+    Lc = Vc.shape[1]
+    _check_prefix_args(
+        Lq, Lc, k, exclude_self, buckets, lib_sizes, E_rows, col_ids
+    )
+    E_hi = buckets[-1]
+    # The first tile selects directly (no carry), so it must be at least k
+    # wide; its width is min(tile_c, lib_sizes[0]) and lib_sizes[0] >= k is
+    # validated above, hence clamping tile_c up to k suffices.  tile_c is
+    # deliberately NOT clamped down to lib_sizes[0]: segments between
+    # boundaries should stay whole (one merge per snapshot gap) whenever
+    # they fit a tile — splitting them only adds merge overhead.
+    tile_c = max(k + 1 if exclude_self else k, tile_c)
+    want = set(buckets)
+    Vq = Vq[:E_hi]
+    row_ids = jnp.arange(Lq, dtype=jnp.int32)[:, None]
+    boundary = set(lib_sizes)
+
+    run_i = run_d = None
+    snaps_i, snaps_d = [], []
+    for start, stop in _prefix_tile_bounds(lib_sizes, tile_c):
+        width = stop - start
+        if col_ids is None:
+            vc_t = jax.lax.slice(Vc, (0, start), (E_hi, stop))
+            ids = start + jnp.arange(width, dtype=jnp.int32)
+        else:
+            ids = jax.lax.slice_in_dim(col_ids, start, stop).astype(jnp.int32)
+            vc_t = jnp.take(Vc[:E_hi], ids, axis=1)
+        ids_b = jnp.broadcast_to(ids[None, :], (Lq, width))
+        invalid = (ids_b == row_ids) if exclude_self else None
+        D = jnp.zeros((Lq, width), dist_dtype)
+        dms = []
+        for e in range(E_hi):
+            D = _acc_sq(D, Vq[e], vc_t[e], dist_dtype)
+            if e + 1 not in want:
+                continue
+            Dm = D.astype(jnp.float32)
+            if invalid is not None:
+                Dm = jnp.where(invalid, INF, Dm)
+            dms.append(Dm)
+        # ONE batched merge per tile across all bucket dimensions (top_k
+        # batches over leading axes) — bit-identical to per-bucket merges
+        # but with len(buckets) x fewer host-visible ops, which is what
+        # keeps the per-tile constant below a from-scratch rebuild's.
+        Dsel = jnp.stack(dms)  # (nb, Lq, width)
+        ids_nb = jnp.broadcast_to(ids_b, Dsel.shape)
+        if run_i is None:
+            md, mi = Dsel, ids_nb
+        else:
+            md = jnp.concatenate([run_d, Dsel], axis=-1)
+            mi = jnp.concatenate([run_i, ids_nb], axis=-1)
+        neg_d, pos = jax.lax.top_k(-md, k)
+        run_i = jnp.take_along_axis(mi, pos, axis=-1)
+        run_d = -neg_d
+        if stop in boundary:
+            snaps_i.append(run_i)
+            snaps_d.append(run_d)
+    return jnp.stack(snaps_i), jnp.stack(snaps_d)
+
+
+def knn_tables_prefix_rebuild(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    buckets: tuple[int, ...],
+    lib_sizes: tuple[int, ...],
+    tile_c: int,
+    dist_dtype=jnp.float32,
+    col_ids: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Old-style per-size convergence tables: S INDEPENDENT sweeps, one per
+    library size (what every path did before the prefix-snapshot builder).
+
+    Same contract and bit-identical output to
+    :func:`knn_tables_prefix_streaming`; kept as the engine base-class
+    fallback and the A/B baseline of ``benchmarks/run.py significance``.
+    """
+    _check_prefix_args(  # validate the FULL size tuple, not just each Ls
+        Vq.shape[1], Vc.shape[1], k, exclude_self, buckets, lib_sizes,
+        Vq.shape[0], col_ids,
+    )
+    outs = [
+        knn_tables_prefix_streaming(
+            Vq, Vc, k, exclude_self, buckets, (Ls,), tile_c, dist_dtype,
+            col_ids,
+        )
+        for Ls in lib_sizes
+    ]
+    return (
+        jnp.concatenate([o[0] for o in outs]),
+        jnp.concatenate([o[1] for o in outs]),
+    )
+
+
 def merge_shard_tables(
     idx_parts, dist_parts, k: int | None = None
 ) -> tuple[np.ndarray, np.ndarray]:

@@ -52,6 +52,14 @@ def _flat(mesh) -> tuple[str, ...]:
     return tuple(mesh.axis_names)
 
 
+def default_mesh():
+    """The FLAT all-local-devices worker mesh every driver defaults to
+    (paper's 512 flat workers); shared by phase 1/2 and the significance
+    subsystem so one process always decomposes work the same way."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("workers",))
+
+
 def make_simplex_fn(mesh, cfg: EDMConfig):
     """(chunk, L) sharded on rows -> (rhos (chunk, E_max), optE (chunk,))."""
     axes = _flat(mesh)
@@ -234,8 +242,7 @@ def knn_tables_library_sharded(
     (E_max, Lq, k).
     """
     if mesh is None:
-        n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("workers",))
+        mesh = default_mesh()
     W = mesh.size
     Lc = Vc.shape[1]
     if k > Lc:
@@ -372,8 +379,7 @@ def run_causal_inference(
     allocated at any point.
     """
     if mesh is None:
-        n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("workers",))
+        mesh = default_mesh()
     n_workers = mesh.size
     N, L = ts.shape
     chunk = n_workers * cfg.lib_block

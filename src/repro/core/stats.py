@@ -8,13 +8,23 @@ _EPS = 1e-8
 
 
 def pearson(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Pearson correlation along the last axis; 0 when either side is constant
-    (cppEDM reports 0 skill for degenerate predictions)."""
+    """Pearson correlation along the last axis; 0 when either side is
+    degenerate (cppEDM reports 0 skill for degenerate predictions).
+
+    Degenerate covers BOTH zero variance — constant (dead-neuron) series,
+    where num/den would be 0/0 = NaN — and non-finite moments (a float32
+    variance overflow turns den into inf and num/den into inf/inf = NaN).
+    Significance masking and the assembled causal/p-value maps therefore
+    always see finite rho.  The norm product is computed as
+    sqrt(sum a^2) * sqrt(sum b^2) so it only overflows when a single
+    norm does, not when the product of variances does.
+    """
     a = a - jnp.mean(a, axis=-1, keepdims=True)
     b = b - jnp.mean(b, axis=-1, keepdims=True)
     num = jnp.sum(a * b, axis=-1)
-    den = jnp.sqrt(jnp.sum(a * a, axis=-1) * jnp.sum(b * b, axis=-1))
-    return jnp.where(den > _EPS, num / jnp.maximum(den, _EPS), 0.0)
+    den = jnp.sqrt(jnp.sum(a * a, axis=-1)) * jnp.sqrt(jnp.sum(b * b, axis=-1))
+    good = (den > _EPS) & jnp.isfinite(den) & jnp.isfinite(num)
+    return jnp.where(good, num / jnp.where(good, den, 1.0), 0.0)
 
 
 def simplex_weights(sq_dists: jax.Array, k_valid: jax.Array | int) -> jax.Array:

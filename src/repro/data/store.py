@@ -130,7 +130,9 @@ class TileWriter:
         idx = np.nonzero(~cov[start:])[0]
         return int(idx[0]) + start if idx.size else None
 
-    def chunk_plan(self, chunk: int) -> list[tuple[int, int]]:
+    def chunk_plan(
+        self, chunk: int, covered: np.ndarray | None = None
+    ) -> list[tuple[int, int]]:
         """Ordered (row0, nrows) work list for a resume at chunk granularity.
 
         Each maximal RUN of uncovered rows is split into at-most-``chunk``
@@ -140,8 +142,16 @@ class TileWriter:
         missing.  Computed up-front so the streaming loop can keep
         multiple chunks in flight without re-reading coverage (this
         process is the only writer; see runtime/stream.py).
+
+        ``covered``: optional (N,) bool overriding this writer's own
+        coverage — drivers emitting several artifacts in lockstep (the
+        significance pipeline's rho_conv/pvals writers) pass the AND of
+        all their coverages so a crash mid-chunk recomputes the chunk
+        for every artifact.
         """
-        uncovered = np.nonzero(~self.covered())[0]
+        if covered is None:
+            covered = self.covered()
+        uncovered = np.nonzero(~np.asarray(covered))[0]
         if uncovered.size == 0:
             return []
         run_starts = np.nonzero(np.diff(uncovered) > 1)[0] + 1

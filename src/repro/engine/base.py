@@ -78,6 +78,36 @@ class Engine:
         rows = jnp.asarray([e - 1 for e in buckets], jnp.int32)
         return idx[rows], sqd[rows]
 
+    def knn_tables_prefix(
+        self, Vq, Vc, k, *, buckets, lib_sizes, exclude_self, cfg,
+        col_ids=None,
+    ):
+        """Per-library-size kNN tables for the CCM convergence diagnostic.
+
+        lib_sizes: static ascending tuple of nested library prefix sizes
+        (candidate COLUMNS [0, Ls)); col_ids: optional (Lc,) permutation
+        making the prefixes seeded random subsamples (DESIGN.md SS9).
+        Returns (idx, sq_dists), each (len(lib_sizes), len(buckets), Lq, k).
+
+        Default: the old-style per-size rebuild — one independent
+        streaming sweep per library size.  Correct on every backend; the
+        reference engine overrides with the ONE-sweep prefix-snapshot
+        builder (bit-identical output, ~S x less candidate traffic).
+        A prefix-snapshotting Pallas kernel (running VMEM top-k flushed
+        at boundary tiles) is future work, so the Pallas engines inherit
+        this fallback.
+        """
+        from repro.core import knn
+
+        tile = (
+            self.knn_selection_tile(Vc.shape[1], cfg)
+            or knn.STREAM_DEFAULT_TILE_C
+        )
+        return knn.knn_tables_prefix_rebuild(
+            Vq, Vc, k, exclude_self, buckets, lib_sizes, tile,
+            dist_dtype=jnp.dtype(cfg.dist_dtype), col_ids=col_ids,
+        )
+
     def simplex_forecast(self, idx, w, fut_c):
         """Weighted neighbour-future average (paper Alg. 5).
 

@@ -15,7 +15,12 @@ from repro.core.types import EDMConfig
 from repro.engine import get_engine
 
 # op name -> (atol on values); kNN indices are compared exactly.
-TOLERANCES = {"knn_tables": 1e-5, "knn_tables_bucketed": 1e-5, "ccm_lookup": 1e-5}
+TOLERANCES = {
+    "knn_tables": 1e-5,
+    "knn_tables_bucketed": 1e-5,
+    "knn_tables_prefix": 0.0,  # one-sweep vs rebuild is a BIT-identity claim
+    "ccm_lookup": 1e-5,
+}
 
 
 def check_engine(
@@ -67,6 +72,21 @@ def check_engine(
         ),
         ref.knn_tables_bucketed(
             Vq, Vc, k, buckets=buckets, exclude_self=exclude, cfg=cfg
+        ),
+    )
+
+    lib_sizes = tuple(
+        sorted({max(k + 2, Lc // 4), max(k + 3, Lc // 2), Lc})
+    )
+    _cmp(
+        "knn_tables_prefix",
+        eng.knn_tables_prefix(
+            Vq, Vc, k, buckets=buckets, lib_sizes=lib_sizes,
+            exclude_self=exclude, cfg=cfg,
+        ),
+        ref.knn_tables_prefix(
+            Vq, Vc, k, buckets=buckets, lib_sizes=lib_sizes,
+            exclude_self=exclude, cfg=cfg,
         ),
     )
 

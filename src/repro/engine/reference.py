@@ -35,6 +35,21 @@ class ReferenceEngine(Engine):
             impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),
         )
 
+    def knn_tables_prefix(
+        self, Vq, Vc, k, *, buckets, lib_sizes, exclude_self, cfg,
+        col_ids=None,
+    ):
+        from repro.core import knn
+
+        tile = (
+            self.knn_selection_tile(Vc.shape[1], cfg)
+            or knn.STREAM_DEFAULT_TILE_C
+        )
+        return knn.knn_tables_prefix_streaming(
+            Vq, Vc, k, exclude_self, buckets, lib_sizes, tile,
+            dist_dtype=jnp.dtype(cfg.dist_dtype), col_ids=col_ids,
+        )
+
     def knn_tables_bucketed(self, Vq, Vc, k, *, buckets, exclude_self, cfg):
         from repro.core import knn
 

@@ -1,0 +1,148 @@
+"""Batched CCM convergence diagnostic (DESIGN.md SS9).
+
+CCM only evidences causation when cross-map skill CONVERGES — rho grows
+with library size (paper SSII-B) — but the per-pair subsampling loop the
+seed carried rebuilt a full kNN table per (pair, size): O(S) full sweeps
+per pair, unusable beyond a handful of pairs.  This module batches the
+diagnostic with the same machinery as phase 2:
+
+  * per library row, ONE prefix-snapshot table build
+    (`Engine.knn_tables_prefix`) yields tables for every library size in
+    a single candidate sweep — libraries are nested prefixes of a seeded
+    random permutation of the library points;
+  * per size, the rho row comes from the existing bucketed `ccm_lookup`
+    path (tables for the distinct-optE bucket set, targets grouped per
+    bucket), so curves for ALL N targets of a row cost S lookups;
+  * the (S,) curve per pair is reduced on device to two statistics:
+    drho = rho_max - rho_min and a Kendall-style monotonic-trend score.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine as engines
+from repro.core import ccm, embedding, knn
+from repro.core.stats import pearson, simplex_weights
+from repro.core.types import EDMConfig
+
+
+def subsample_permutation(key: jax.Array, Lp: int) -> jax.Array:
+    """The seeded library-subsampling permutation (one per run): prefixes
+    of it are the nested random libraries of every convergence build."""
+    return jax.random.permutation(key, Lp).astype(jnp.int32)
+
+
+def convergence_stats(curves: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reduce rho-vs-library-size curves to (drho, trend).
+
+    curves: (S, ...) rho at each library size.  drho = rho_max - rho_min
+    (the paper-style convergence magnitude); trend = the Kendall-style
+    monotonic-trend score mean_{s<t} sign(rho_t - rho_s) in [-1, 1]
+    (+1 = strictly increasing with library size — the causal signature;
+    ~0 = flat/noise; -1 = strictly decreasing).
+    """
+    S = curves.shape[0]
+    drho = jnp.max(curves, axis=0) - jnp.min(curves, axis=0)
+    i, j = np.triu_indices(S, 1)
+    trend = jnp.mean(jnp.sign(curves[j] - curves[i]), axis=0)
+    return drho, trend
+
+
+def conv_row_tables(
+    x: jax.Array,
+    cfg: EDMConfig,
+    plan: ccm.BucketPlan,
+    lib_sizes: tuple[int, ...],
+    col_ids: jax.Array | None,
+) -> tuple[jax.Array, jax.Array]:
+    """Prefix-snapshot tables + simplex weights for ONE library series.
+
+    Returns (idx, w), each (S, len(buckets), Lp, k): slice s is the
+    bucketed table set of the size-lib_sizes[s] nested library, directly
+    consumable by `ccm.ccm_row_lookup_bucketed` per size.
+    """
+    eng = engines.get_engine(cfg.engine)
+    Lp = cfg.n_points(x.shape[0])
+    kb = ccm._bucket_k(cfg, plan)
+    ccm._check_k(kb, Lp, cfg, "conv_row_tables")
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    idx, sqd = eng.knn_tables_prefix(
+        V, V, kb, buckets=plan.buckets, lib_sizes=lib_sizes,
+        exclude_self=cfg.exclude_self, cfg=cfg, col_ids=col_ids,
+    )
+    # tables_with_weights_bucketed broadcasts over the leading S axis.
+    return knn.tables_with_weights_bucketed(idx, sqd, plan.buckets)
+
+
+def conv_block_tables(
+    lib_block: jax.Array,
+    cfg: EDMConfig,
+    plan: ccm.BucketPlan,
+    lib_sizes: tuple[int, ...],
+    col_ids: jax.Array | None,
+):
+    """(B, L) -> (idx, w) each (B, S, len(buckets), Lp, k)."""
+    return jax.vmap(
+        lambda x: conv_row_tables(x, cfg, plan, lib_sizes, col_ids)
+    )(lib_block)
+
+
+def conv_block_tile(
+    idx: jax.Array,
+    w: jax.Array,
+    fut_tile: jax.Array,
+    cfg: EDMConfig,
+    seg_plan: tuple[tuple[int, int], ...],
+) -> tuple[jax.Array, jax.Array]:
+    """(drho, trend) of one (row-chunk x col-tile) block.
+
+    idx/w: (B, S, nb, Lp, k) prefix tables; fut_tile: (t, Lp)
+    bucket-sorted target futures.  Returns (drho, trend), each (B, t);
+    the (S, t) curves per row never leave the device.
+    """
+    S = idx.shape[1]
+
+    def per_row(i_r, w_r):
+        curves = jnp.stack(
+            [
+                ccm.ccm_row_lookup_bucketed(i_r[s], w_r[s], fut_tile, cfg, seg_plan)
+                for s in range(S)
+            ]
+        )
+        return convergence_stats(curves)
+
+    drho, trend = jax.vmap(per_row)(idx, w)
+    return drho, trend
+
+
+def ccm_convergence_pair(
+    x: jax.Array,
+    y: jax.Array,
+    E: int,
+    lib_sizes: tuple[int, ...],
+    cfg: EDMConfig,
+    key: jax.Array,
+) -> jax.Array:
+    """Convergence curve of ONE pair through the batched prefix path.
+
+    Cross-maps y from x's manifold at embedding dimension E over nested
+    random libraries (prefixes of the key-seeded permutation).  Returns
+    rho (S,).  This is the engine behind the deprecated
+    `repro.core.ccm.ccm_convergence` wrapper.
+    """
+    eng = engines.get_engine(cfg.engine)
+    Lp = cfg.n_points(x.shape[0])
+    perm = subsample_permutation(key, Lp)
+    V = embedding.lag_matrix(x, cfg.E_max, cfg.tau, Lp)
+    y_fut = embedding.future_values(y, cfg.E_max, cfg.tau, cfg.Tp, Lp)
+    idx, sqd = eng.knn_tables_prefix(
+        V, V, E + 1, buckets=(E,), lib_sizes=tuple(lib_sizes),
+        exclude_self=cfg.exclude_self, cfg=cfg, col_ids=perm,
+    )
+    w = simplex_weights(sqd, E + 1)
+    preds = jax.vmap(lambda i, ww: knn.simplex_forecast(i[0], ww[0], y_fut))(
+        idx, w
+    )
+    return pearson(y_fut[None, :], preds)

@@ -1,0 +1,393 @@
+"""Streaming significance driver: rho maps -> validated causal graphs.
+
+Runs the two statistical stages of DESIGN.md SS9 over the same
+(row-chunk x col-tile) decomposition as phase 2, sharing its meshes,
+ChunkStreamer, and TileWriter store:
+
+  * CONVERGENCE — per row chunk, ONE prefix-snapshot table build yields
+    bucketed kNN tables for every library size (nested random prefixes
+    of the seeded subsampling permutation); per column tile the
+    rho-vs-library-size curves reduce on device to the drho and
+    monotonic-trend maps.
+  * SURROGATE NULLS — per row chunk the full-library tables are rebuilt
+    once (exactly phase 2's tables, so the null matches the observed
+    statistic); per column tile every target contributes m surrogate
+    futures batched along the target axis, and the per-pair empirical
+    p-value (1 + #{null >= obs}) / (m + 1) is computed on device.
+  * FDR + ASSEMBLY — empirical p-values take only m+1 distinct values,
+    so the Benjamini–Hochberg threshold is computed EXACTLY from
+    streamed per-value counts (no sort, no dense p array), and the
+    significance-masked edge list is assembled row-streamed from the
+    (memmapped) maps.
+
+With ``out_dir`` set, blocks stream through TileWriters into the new
+store artifacts ``rho_conv/`` (drho; trend.npy rides in the same dir),
+``pvals/``, and ``edges/`` — no dense (N, N) host allocation beyond the
+existing memmap assembly, and killed runs RESUME at the first chunk any
+artifact is missing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ccm
+from repro.core.pipeline import (
+    _flat,
+    _pad_rows,
+    default_mesh,
+    make_ccm_tables_fn_bucketed,
+)
+from repro.core.types import EDMConfig
+from repro.data import store
+from repro.data.store import TileWriter
+from repro.inference import convergence, significance, surrogates
+from repro.inference.types import SignificanceConfig, SignificanceResult
+from repro.runtime.stream import ChunkStreamer
+
+
+# ------------------------------------------------- shard_map'd chunk/tile fns
+def make_conv_tables_fn(mesh, cfg: EDMConfig, plan, lib_sizes):
+    """(chunk, L) sharded + subsampling permutation repl -> prefix tables
+    (idx, w) each (chunk, S, nb, Lp, k) sharded on rows."""
+    axes = _flat(mesh)
+    tspec = P(axes, None, None, None, None)
+
+    def local(rows, col_ids):
+        return convergence.conv_block_tables(rows, cfg, plan, lib_sizes, col_ids)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axes, None), P(None)),
+            out_specs=(tspec, tspec),
+            check_rep=False,
+        )
+    )
+
+
+def make_conv_tile_fn(mesh, cfg: EDMConfig):
+    """seg_plan -> tile fn (memoized like make_ccm_tile_fn_bucketed):
+    (prefix tables sharded; fut_tile repl) -> stacked (2, chunk, t)
+    [drho; trend] sharded on rows."""
+    axes = _flat(mesh)
+    tspec = P(axes, None, None, None, None)
+
+    @functools.lru_cache(maxsize=None)
+    def for_plan(seg_plan):
+        def local(idx, w, fut_tile):
+            drho, trend = convergence.conv_block_tile(
+                idx, w, fut_tile, cfg, seg_plan
+            )
+            return jnp.stack([drho, trend])
+
+        return jax.jit(
+            shard_map(
+                local,
+                mesh=mesh,
+                in_specs=(tspec, tspec, P(None, None)),
+                out_specs=P(None, axes, None),
+                check_rep=False,
+            )
+        )
+
+    return for_plan
+
+
+def make_null_tile_fn(mesh, cfg: EDMConfig, m: int):
+    """seg_plan -> tile fn: (full-library tables sharded; surrogate
+    futures repl; observed rho block sharded) -> pvals (chunk, t)."""
+    axes = _flat(mesh)
+    tspec = P(axes, None, None, None)
+
+    @functools.lru_cache(maxsize=None)
+    def for_plan(seg_plan):
+        seg_plan_m = tuple((b, cnt * m) for b, cnt in seg_plan)
+
+        def local(idx, w, fut_surr, rho_obs):
+            return significance.null_block_pvals(
+                idx, w, fut_surr, rho_obs, cfg, seg_plan_m, m
+            )
+
+        return jax.jit(
+            shard_map(
+                local,
+                mesh=mesh,
+                in_specs=(tspec, tspec, P(None, None), P(axes, None)),
+                out_specs=P(axes, None),
+                check_rep=False,
+            )
+        )
+
+    return for_plan
+
+
+# ------------------------------------------------------------------- driver
+def _writer(out_dir, name: str, N: int, order) -> TileWriter:
+    w = TileWriter(f"{out_dir}/{name}", N)
+    w.ensure_col_order(order)
+    return w
+
+
+def _check_resume_config(out_dir, sig: SignificanceConfig) -> None:
+    """Pin the null-model parameters of a store to its first run.
+
+    Coverage is the only thing the resume path inspects, so without this
+    guard a rerun with different surrogates/seed/lib_sizes would silently
+    reuse blocks computed under the OLD parameters (and stamp the new
+    ones into meta.json).  alpha is deliberately NOT pinned: it only
+    enters the BH pass and edge mask, which are recomputed every run.
+    """
+    import json
+    import pathlib
+
+    f = pathlib.Path(out_dir) / "significance.json"
+    want = {
+        "lib_sizes": list(sig.lib_sizes),
+        "n_surrogates": sig.n_surrogates,
+        "surrogate": sig.surrogate,
+        "seed": sig.seed,
+    }
+    if f.exists():
+        have = json.loads(f.read_text())
+        if have != want:
+            raise ValueError(
+                f"resume config mismatch in {out_dir}: store was written "
+                f"with {have} but this run asks for {want}; use a fresh "
+                "--out dir (only --fdr may change across resumes)"
+            )
+        return
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(json.dumps(want))
+
+
+def run_significance(
+    ts: np.ndarray,
+    optE: np.ndarray,
+    rho: np.ndarray,
+    cfg: EDMConfig,
+    sig: SignificanceConfig,
+    mesh=None,
+    out_dir: Optional[str] = None,
+    progress: bool = False,
+) -> SignificanceResult:
+    """Validate a causal map: convergence statistics, surrogate p-values,
+    and the BH-FDR significance-masked edge list.
+
+    ts: (N, L) series; optE: (N,) phase-1 optimal embeddings; rho: the
+    (N, N) observed causal map (memmap fine — read O(chunk x N) at a
+    time).  Stages run per sig.lib_sizes / sig.n_surrogates; with
+    ``out_dir`` every artifact streams through a TileWriter (resumable)
+    and the returned maps are disk-backed memmaps.
+    """
+    if mesh is None:
+        mesh = default_mesh()
+    N, L = ts.shape
+    Lp = cfg.n_points(L)
+    do_conv = bool(sig.lib_sizes)
+    do_null = sig.n_surrogates > 0
+    if not (do_conv or do_null):
+        return SignificanceResult(None, None, None, None)
+    if do_conv and sig.lib_sizes[-1] > Lp:
+        raise ValueError(
+            f"lib_sizes[-1]={sig.lib_sizes[-1]} exceeds the {Lp} embeddable "
+            f"library points of length-{L} series (E_max={cfg.E_max}, "
+            f"tau={cfg.tau}, Tp={cfg.Tp})"
+        )
+    m = sig.n_surrogates
+    chunk = mesh.size * cfg.lib_block
+    T = cfg.target_tile or N
+
+    optE = np.asarray(optE, np.int32)
+    plan, order = ccm.make_bucket_plan(optE)
+    tile_plans = ccm.make_tile_plans(plan, T)
+    ts_fut = np.asarray(ccm.all_futures(jnp.asarray(ts), cfg))
+
+    key = jax.random.PRNGKey(sig.seed)
+    perm_key, surr_key = jax.random.split(key)
+    col_ids = convergence.subsample_permutation(perm_key, Lp)
+
+    conv_tables_fn = conv_tile_for = full_tables_fn = null_tile_for = None
+    if do_conv:
+        conv_tables_fn = make_conv_tables_fn(mesh, cfg, plan, sig.lib_sizes)
+        conv_tile_for = make_conv_tile_fn(mesh, cfg)
+    if do_null:
+        full_tables_fn = make_ccm_tables_fn_bucketed(mesh, cfg, plan)
+        null_tile_for = make_null_tile_fn(mesh, cfg, m)
+
+    # ---- outputs: streaming writers or (small-N) dense host maps -------
+    if out_dir is not None:
+        _check_resume_config(out_dir, sig)
+        conv_w = _writer(out_dir, "rho_conv", N, order) if do_conv else None
+        trend_w = _writer(out_dir, "rho_trend", N, order) if do_conv else None
+        pv_w = _writer(out_dir, "pvals", N, order) if do_null else None
+        writers = [w for w in (conv_w, trend_w, pv_w) if w is not None]
+        cov = writers[0].covered()
+        for w in writers[1:]:
+            cov &= w.covered()
+        plan_chunks = writers[0].chunk_plan(chunk, covered=cov)
+        drho_map = trend_map = pv_map = None
+    else:
+        conv_w = trend_w = pv_w = None
+        drho_map = np.zeros((N, N), np.float32) if do_conv else None
+        trend_map = np.zeros((N, N), np.float32) if do_conv else None
+        pv_map = np.ones((N, N), np.float32) if do_null else None
+        plan_chunks = [(r, min(chunk, N - r)) for r in range(0, N, chunk)]
+
+    # Streaming BH inputs: empirical p-values take the m+1 discrete values
+    # j/(m+1), so per-value counts (diagonal excluded) determine the BH
+    # threshold exactly — no dense p array, no sort (DESIGN.md SS9).
+    p_counts = np.zeros(m + 1, np.int64)
+
+    def drain(tag, block):
+        kind, row0, c0, valid = tag
+        cols = order[c0 : c0 + block.shape[-1]]
+        last = c0 + block.shape[-1] >= N
+        if kind == "conv":
+            drho_b, trend_b = block[0][:valid], block[1][:valid]
+            if conv_w is not None:
+                conv_w.write_tile(row0, c0, drho_b, commit=last)
+                trend_w.write_tile(row0, c0, trend_b, commit=last)
+            else:
+                drho_map[row0 : row0 + valid, cols] = drho_b
+                trend_map[row0 : row0 + valid, cols] = trend_b
+        else:
+            pv_b = block[:valid]
+            offdiag = cols[None, :] != (row0 + np.arange(valid))[:, None]
+            p_counts[:] += np.bincount(
+                np.rint(pv_b[offdiag] * (m + 1)).astype(np.int64) - 1,
+                minlength=m + 1,
+            )
+            if pv_w is not None:
+                pv_w.write_tile(row0, c0, pv_b, commit=last)
+            else:
+                pv_map[row0 : row0 + valid, cols] = pv_b
+        # One line per row chunk: the pval drain when the null stage runs
+        # (it lands last), else the conv drain.
+        if progress and last and (kind == "pval" or not do_null):
+            print(f"significance rows {row0}..{row0 + valid} / {N}")
+
+    resumed_rows = N - sum(v for _, v in plan_chunks)
+    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+        for row0, valid in plan_chunks:
+            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
+            rows_j = jnp.asarray(rows)
+            rho_chunk = np.asarray(rho[row0 : row0 + valid]) if do_null else None
+            if do_conv:
+                cidx, cw = conv_tables_fn(rows_j, col_ids)
+            if do_null:
+                fidx, fw = full_tables_fn(rows_j)
+            for c0, seg_plan in tile_plans:
+                c1 = min(c0 + T, N)
+                orig = order[c0:c1]
+                if do_conv:
+                    fut_tile = jnp.asarray(ts_fut[orig])
+                    streamer.submit(
+                        ("conv", row0, c0, valid),
+                        conv_tile_for(seg_plan)(cidx, cw, fut_tile),
+                    )
+                if do_null:
+                    # Regenerated per (chunk, tile) like _phase2_tiled's
+                    # fut_tile upload: keeping every tile's (t*m, Lp)
+                    # surrogate batch resident would defeat the tiling at
+                    # scale, and the per-tile FFT is dominated by the m x
+                    # lookup work the tile triggers anyway.
+                    fut_surr = surrogates.surrogate_futures(
+                        surr_key, jnp.asarray(ts[orig]),
+                        jnp.asarray(orig.astype(np.int32)),
+                        n=m, kind=sig.surrogate, cfg=cfg,
+                    )
+                    rho_obs = jnp.asarray(
+                        _pad_rows(rho_chunk[:, orig], chunk)
+                    )
+                    streamer.submit(
+                        ("pval", row0, c0, valid),
+                        null_tile_for(seg_plan)(fidx, fw, fut_surr, rho_obs),
+                    )
+
+    # ---- assembly ------------------------------------------------------
+    meta_common = {
+        "lib_sizes": list(sig.lib_sizes),
+        "n_surrogates": m,
+        "surrogate": sig.surrogate,
+        "seed": sig.seed,
+    }
+    if conv_w is not None:
+        conv_w.commit()
+        trend_w.commit()
+        drho_map = conv_w.assemble(mmap_path=conv_w.dir / "data.npy")
+        trend_map = trend_w.assemble(mmap_path=trend_w.dir / "data.npy")
+        store.save_meta(
+            conv_w.dir, drho_map.shape, drho_map.dtype,
+            {**meta_common, "stat": "delta_rho", "trend": "../rho_trend"},
+        )
+        store.save_meta(
+            trend_w.dir, trend_map.shape, trend_map.dtype,
+            {**meta_common, "stat": "monotonic_trend"},
+        )
+
+    p_threshold, edges = 0.0, None
+    n_tests = int(p_counts.sum())
+    if do_null:
+        if pv_w is not None:
+            pv_w.commit()
+            pv_map = pv_w.assemble(mmap_path=pv_w.dir / "data.npy")
+        if resumed_rows:
+            # Chunks already durable from a prior run never re-drained, so
+            # their p-value counts are recovered from the assembled map.
+            n_tests, p_counts = _recount_pvals(pv_map, m)
+        p_threshold, _ = significance.bh_threshold_discrete(
+            p_counts, m, sig.alpha
+        )
+        # p-values in the map are float32 of j/(m+1); cut at the MIDPOINT
+        # between discrete levels so the threshold level itself is always
+        # included regardless of f32-vs-f64 rounding of the quotient.
+        p_cut = p_threshold + 0.5 / (m + 1) if p_threshold > 0 else 0.0
+        edges = significance.assemble_edges(
+            pv_map, rho, drho_map, trend_map, p_cut
+        )
+        if pv_w is not None:
+            store.save_meta(
+                pv_w.dir, pv_map.shape, pv_map.dtype,
+                {**meta_common, "alpha": sig.alpha,
+                 "p_threshold": p_threshold, "n_tests": n_tests},
+            )
+            edir = pv_w.dir.parent / "edges"
+            edir.mkdir(parents=True, exist_ok=True)
+            np.save(edir / "data.npy", edges)
+            store.save_meta(
+                edir, edges.shape, edges.dtype.str,
+                {**meta_common, "alpha": sig.alpha,
+                 "p_threshold": p_threshold, "n_tests": n_tests,
+                 "n_edges": int(edges.shape[0]),
+                 "fields": list(edges.dtype.names)},
+            )
+        if progress:
+            print(
+                f"BH-FDR alpha={sig.alpha}: p* = {p_threshold:.4g} over "
+                f"{n_tests} tests -> {0 if edges is None else len(edges)} edges"
+            )
+
+    return SignificanceResult(
+        drho=drho_map, trend=trend_map, pvals=pv_map, edges=edges,
+        p_threshold=p_threshold, n_tests=n_tests,
+    )
+
+
+def _recount_pvals(pv_map: np.ndarray, m: int) -> tuple[int, np.ndarray]:
+    """Row-streamed per-value p counts (diagonal excluded) from a
+    (memmapped) p-value map — the resume path of the discrete BH pass."""
+    N = pv_map.shape[0]
+    counts = np.zeros(m + 1, np.int64)
+    for i in range(N):
+        row = np.asarray(pv_map[i])
+        idx = np.rint(np.delete(row, i) * (m + 1)).astype(np.int64) - 1
+        counts += np.bincount(idx, minlength=m + 1)
+    return int(counts.sum()), counts

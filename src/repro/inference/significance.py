@@ -1,0 +1,146 @@
+"""Surrogate p-values, BH-FDR control, and causal-edge assembly.
+
+At whole-brain scale a raw-rho threshold drowns in multiple comparisons
+(N^2 - N simultaneous tests); large-scale network inference needs
+surrogate null distributions with FDR-corrected testing (Novelli et al.
+2019).  The pipeline here: per-pair empirical p-values against the
+surrogate null, one Benjamini–Hochberg pass across the whole map, and a
+significance-masked edge list as the persisted causal graph.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ccm
+from repro.core.types import EDMConfig
+from repro.inference.types import EDGE_DTYPE
+
+
+def null_block_pvals(
+    idx: jax.Array,
+    w: jax.Array,
+    fut_surr: jax.Array,
+    rho_obs: jax.Array,
+    cfg: EDMConfig,
+    seg_plan_m: tuple[tuple[int, int], ...],
+    m: int,
+) -> jax.Array:
+    """Per-pair surrogate p-values of one (row-chunk x col-tile) block.
+
+    idx/w: (B, nb, Lp, k) FULL-library bucketed tables (the same tables
+    phase 2 used, so the null matches the observed statistic exactly);
+    fut_surr: (t*m, Lp) surrogate futures in surrogate_futures layout;
+    rho_obs: (B, t) observed rho block; seg_plan_m: the tile's bucket
+    seg_plan with every count scaled by m.  Returns pvals (B, t) with the
+    standard +1 correction: p = (1 + #{null >= obs}) / (m + 1), so the
+    smallest attainable p is 1/(m+1) — never an impossible zero.
+    """
+    null = jax.vmap(
+        lambda i_r, w_r: ccm.ccm_row_lookup_bucketed(
+            i_r, w_r, fut_surr, cfg, seg_plan_m
+        )
+    )(idx, w)  # (B, t*m)
+    null = null.reshape(null.shape[0], -1, m)
+    exceed = jnp.sum(null >= rho_obs[..., None], axis=-1)
+    return (1.0 + exceed) / (m + 1.0)
+
+
+# ------------------------------------------------------------------ BH-FDR
+def bh_threshold(pvals: np.ndarray, alpha: float) -> tuple[float, int]:
+    """Benjamini–Hochberg rejection threshold over a flat p-value array.
+
+    Returns (p_star, n_tests): reject every p <= p_star, where p_star is
+    the largest p_(i) with p_(i) <= alpha * i / n (0.0 when nothing
+    passes — then p <= 0.0 rejects nothing, as empirical p-values are
+    strictly positive).
+    """
+    p = np.sort(np.asarray(pvals, np.float64).ravel())
+    n = p.size
+    if n == 0:
+        return 0.0, 0
+    crit = alpha * np.arange(1, n + 1) / n
+    ok = np.nonzero(p <= crit)[0]
+    return (float(p[ok[-1]]), n) if ok.size else (0.0, n)
+
+
+def bh_threshold_discrete(
+    counts: np.ndarray, m: int, alpha: float
+) -> tuple[float, int]:
+    """BH threshold from per-value COUNTS of discrete empirical p-values.
+
+    Surrogate p-values take only the m+1 values j/(m+1), j = 1..m+1, so
+    ``counts[j-1] = #{p == j/(m+1)}`` determines the BH pass exactly: a
+    tied run of value v is accepted iff v <= alpha * rank_max(v) / n
+    (the most favourable rank of the run decides, as in the sorted
+    scan), and the threshold is the largest accepted value.  Identical
+    to :func:`bh_threshold` on the expanded array — asserted in tests —
+    but streamable in O(m) memory with no sort: the whole-map FDR pass
+    never materializes a dense p array (DESIGN.md SS9).
+    """
+    counts = np.asarray(counts, np.int64)
+    if counts.shape != (m + 1,):
+        raise ValueError(f"counts must have shape ({m + 1},): {counts.shape}")
+    n = int(counts.sum())
+    if n == 0:
+        return 0.0, 0
+    ranks = np.cumsum(counts)  # max rank of each tied value run
+    values = np.arange(1, m + 2) / (m + 1.0)
+    ok = np.nonzero((counts > 0) & (values <= alpha * ranks / n))[0]
+    return (float(values[ok[-1]]), n) if ok.size else (0.0, n)
+
+
+def bh_adjust(pvals: np.ndarray) -> np.ndarray:
+    """BH-adjusted p-values (q-values), same shape as the input.
+
+    q_(i) = min_{j >= i} p_(j) * n / j — the smallest FDR level at which
+    p_(i) would be rejected.  Matches
+    scipy.stats.false_discovery_control(method="bh") (the test oracle).
+    """
+    p = np.asarray(pvals, np.float64)
+    flat = p.ravel()
+    n = flat.size
+    order = np.argsort(flat)
+    scaled = flat[order] * n / np.arange(1, n + 1)
+    q_sorted = np.minimum.accumulate(scaled[::-1])[::-1]
+    q = np.empty(n, np.float64)
+    q[order] = np.minimum(q_sorted, 1.0)
+    return q.reshape(p.shape)
+
+
+# ------------------------------------------------------------ edge assembly
+def assemble_edges(
+    pvals: np.ndarray,
+    rho: np.ndarray,
+    drho: np.ndarray | None,
+    trend: np.ndarray | None,
+    p_threshold: float,
+) -> np.ndarray:
+    """Significance-masked causal edge list (EDGE_DTYPE, sorted by pval).
+
+    Row-streamed over the (possibly memmapped) maps — no dense boolean
+    mask or second map copy; the diagonal (self-edges) is never tested.
+    rho[i, j] high means j CCM-causes i, so an edge is (src=j, dst=i).
+    """
+    N = pvals.shape[0]
+    parts = []
+    for i in range(N):
+        p_row = np.asarray(pvals[i])
+        sig = p_row <= p_threshold
+        sig[i] = False
+        (js,) = np.nonzero(sig)
+        if js.size == 0:
+            continue
+        e = np.empty(js.size, EDGE_DTYPE)
+        e["src"] = js
+        e["dst"] = i
+        e["rho"] = np.asarray(rho[i])[js]
+        e["drho"] = np.asarray(drho[i])[js] if drho is not None else 0.0
+        e["trend"] = np.asarray(trend[i])[js] if trend is not None else 0.0
+        e["pval"] = p_row[js]
+        parts.append(e)
+    if not parts:
+        return np.empty(0, EDGE_DTYPE)
+    edges = np.concatenate(parts)
+    return edges[np.argsort(edges["pval"], kind="stable")]

@@ -7,6 +7,10 @@
   PYTHONPATH=src python -m repro.launch.edm_run \
       --synthetic 128x600 --target-tile 32 --out /tmp/causal_map
 
+  # statistically validated causal graph (DESIGN.md SS9)
+  PYTHONPATH=src python -m repro.launch.edm_run --synthetic 64x600 \
+      --lib-sizes 100,200,400 --surrogates 20 --fdr 0.05 --seed 0 --out ...
+
 Reads a zarr-lite dataset (data/store.py), runs distributed simplex
 projection + CCM on all local devices (the production launch wraps the
 same entry point under the pod mesh), streams (row-chunk x col-tile)
@@ -16,7 +20,15 @@ memmap (<out>/causal_map/data.npy) — no dense (N, N) host allocation —
 and --target-tile additionally streams targets through column tiles
 instead of replicating the full (N, Lp) future matrix per device:
 nothing then scales beyond the O(N x L) inputs (host working set
-O(chunk x tile), device O(lib_block x buckets x Lp x k + tile x Lp))."""
+O(chunk x tile), device O(lib_block x buckets x Lp x k + tile x Lp)).
+
+--lib-sizes / --surrogates run the causal-significance subsystem on the
+freshly assembled map: one-sweep convergence CCM (rho_conv/ +
+rho_trend/), surrogate-null p-values (pvals/), and the BH-FDR
+significance-masked edge list (edges/) — all streamed through the same
+TileWriter store, resumable like phase 2.  --seed makes the whole run
+reproducible (subsampling permutation + every surrogate draw derive
+from it; recorded in the run's meta.json)."""
 from __future__ import annotations
 
 import argparse
@@ -29,6 +41,7 @@ from repro.core.types import EDMConfig
 from repro.data import store
 from repro.data.synthetic import dummy_brain
 from repro.engine import available_engines
+from repro.inference import SignificanceConfig, run_significance
 
 
 def main():
@@ -68,6 +81,33 @@ def main():
         "--use-kernels", action="store_true",
         help="DEPRECATED: same as --engine pallas-compiled",
     )
+    ap.add_argument(
+        "--lib-sizes", default="",
+        help="comma-separated ascending library sizes for the convergence "
+        "diagnostic (DESIGN.md SS9), e.g. 100,200,400; writes rho_conv/ "
+        "(delta-rho) and rho_trend/ (monotonic-trend) store artifacts",
+    )
+    ap.add_argument(
+        "--surrogates", type=int, default=0,
+        help="surrogate-null draws per target (0 = skip significance): "
+        "writes per-pair p-values (pvals/) and the FDR-masked causal "
+        "edge list (edges/)",
+    )
+    ap.add_argument(
+        "--fdr", type=float, default=0.05,
+        help="Benjamini-Hochberg FDR level of the edge mask",
+    )
+    ap.add_argument(
+        "--surrogate-kind", default="phase", choices=("phase", "shuffle"),
+        help="null model: FFT phase-randomized (spectrum-preserving) or "
+        "random shuffle (amplitude-distribution only)",
+    )
+    ap.add_argument(
+        "--seed", type=int, default=0,
+        help="root seed of the significance stage: ONE jax.random key "
+        "derived from it drives the convergence subsampling permutation "
+        "and every surrogate draw (recorded in meta.json)",
+    )
     args = ap.parse_args()
 
     if args.synthetic:
@@ -106,6 +146,7 @@ def main():
         "stream_depth": cfg.stream_depth,
         "target_tile": cfg.target_tile,
         "knn_tile_c": cfg.knn_tile_c,
+        "seed": args.seed,
     }
     # The pipeline already assembled the map into <out>/causal_map/data.npy
     # (memmap; no dense host copy) — only the zarr-lite meta is missing.
@@ -113,6 +154,24 @@ def main():
     store.save_meta(
         args.out + "/causal_map", result.rho.shape, result.rho.dtype, meta
     )
+
+    lib_sizes = tuple(int(s) for s in args.lib_sizes.split(",") if s)
+    if lib_sizes or args.surrogates:
+        sig = SignificanceConfig(
+            lib_sizes=lib_sizes, n_surrogates=args.surrogates,
+            alpha=args.fdr, surrogate=args.surrogate_kind, seed=args.seed,
+        )
+        t1 = time.time()
+        out = run_significance(
+            ts, np.asarray(result.optE), np.asarray(result.rho), cfg, sig,
+            out_dir=args.out, progress=True,
+        )
+        stages = [s for s, on in (("convergence", lib_sizes),
+                                  ("surrogates", args.surrogates)) if on]
+        print(f"significance [{'+'.join(stages)}] in {time.time() - t1:.1f}s"
+              + (f"; {len(out.edges)} edges at FDR {args.fdr} "
+                 f"(p* = {out.p_threshold:.4g}, {out.n_tests} tests)"
+                 if out.edges is not None else ""))
 
 
 if __name__ == "__main__":

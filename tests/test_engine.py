@@ -60,7 +60,9 @@ def test_engine_ops_vs_oracle(name):
     from repro.engine.check import check_engine
 
     errs = check_engine(name, E_max=5, Lq=96, Lc=96, seed=1)
-    assert set(errs) == {"knn_tables", "knn_tables_bucketed", "ccm_lookup"}
+    assert set(errs) == {
+        "knn_tables", "knn_tables_bucketed", "knn_tables_prefix", "ccm_lookup",
+    }
 
 
 def test_all_engines_agree_on_synthetic_32x400():

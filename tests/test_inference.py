@@ -1,0 +1,339 @@
+"""Causal-significance subsystem tests (DESIGN.md SS9).
+
+Covers: prefix-snapshot kNN tables (one-sweep vs per-size rebuild,
+bit-identical, both engines, plus a candidate-mask oracle), surrogate
+null models (spectrum preservation, determinism), BH-FDR against the
+scipy oracle, the deprecated ccm_convergence wrapper, the hardened
+pearson, and the end-to-end significance pipeline (coupled-logistic
+edge survives FDR, decoupled pair does not; streaming store matches the
+in-memory path bit-for-bit and resumes).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import knn
+from repro.core.stats import pearson
+from repro.core.types import EDMConfig
+
+
+# ------------------------------------------------- prefix-snapshot tables
+@pytest.fixture(scope="module")
+def lag_pair():
+    rng = np.random.default_rng(0)
+    Vq = jnp.asarray(rng.standard_normal((6, 120)), jnp.float32)
+    perm = jnp.asarray(rng.permutation(120).astype(np.int32))
+    return Vq, perm
+
+
+@pytest.mark.parametrize("engine", ["reference", "pallas-interpret"])
+@pytest.mark.parametrize("tile_c", [13, 64])
+@pytest.mark.parametrize("permuted", [False, True])
+def test_prefix_snapshot_bit_identity(lag_pair, engine, tile_c, permuted):
+    """Engine-op prefix tables == old-style per-size rebuild, bit for bit
+    (indices AND float32 distances), under dividing and non-dividing
+    tiles, natural and permuted candidate order, on both engines (the
+    reference engine runs the ONE-sweep snapshot builder, the Pallas
+    engines the base-class per-size fallback)."""
+    from repro.engine import get_engine
+
+    Vq, perm = lag_pair
+    col_ids = perm if permuted else None
+    cfg = EDMConfig(E_max=6, engine=engine, knn_tile_c=tile_c)
+    buckets, lib_sizes, k = (1, 3, 6), (25, 60, 120), 7
+    got = get_engine(engine).knn_tables_prefix(
+        Vq, Vq, k, buckets=buckets, lib_sizes=lib_sizes,
+        exclude_self=True, cfg=cfg, col_ids=col_ids,
+    )
+    want = knn.knn_tables_prefix_rebuild(
+        Vq, Vq, k, True, buckets, lib_sizes, tile_c, col_ids=col_ids
+    )
+    assert got[0].shape == (3, 3, 120, 7)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_prefix_matches_candidate_mask_oracle(lag_pair):
+    """Each snapshot equals an independent single-E build restricted to
+    the prefix subset via candidate_mask (tie-free gaussian data, so the
+    permuted-order tie rule cannot differ from the natural one)."""
+    Vq, perm = lag_pair
+    lib_sizes = (25, 60, 120)
+    idx, sqd = knn.knn_tables_prefix_streaming(
+        Vq, Vq, 7, True, (3,), lib_sizes, 13, col_ids=perm
+    )
+    perm_np = np.asarray(perm)
+    for s, Ls in enumerate(lib_sizes):
+        member = np.zeros(120, bool)
+        member[perm_np[:Ls]] = True
+        oi, od = knn.knn_table_single_E(
+            Vq, Vq, 3, 7, True, candidate_mask=jnp.asarray(member)
+        )
+        np.testing.assert_array_equal(np.asarray(idx[s, 0]), np.asarray(oi))
+        np.testing.assert_array_equal(np.asarray(sqd[s, 0]), np.asarray(od))
+
+
+def test_prefix_full_size_row_equals_bucketed_tables(lag_pair):
+    """The last snapshot of a natural-order full-length prefix IS the
+    plain bucketed table set."""
+    Vq, _ = lag_pair
+    pi, pd = knn.knn_tables_prefix_streaming(
+        Vq, Vq, 7, True, (1, 3, 6), (30, 120), 64
+    )
+    bi, bd = knn.knn_tables_bucketed(Vq, Vq, 7, True, (1, 3, 6))
+    np.testing.assert_array_equal(np.asarray(pi[-1]), np.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(pd[-1]), np.asarray(bd))
+
+
+def test_prefix_validation_errors(lag_pair):
+    Vq, _ = lag_pair
+    with pytest.raises(ValueError, match="ascending"):
+        knn.knn_tables_prefix_streaming(Vq, Vq, 7, True, (3,), (60, 25), 64)
+    with pytest.raises(ValueError, match="exceeds candidate count"):
+        knn.knn_tables_prefix_streaming(Vq, Vq, 7, True, (3,), (25, 300), 64)
+    with pytest.raises(ValueError, match="too small"):
+        knn.knn_tables_prefix_streaming(Vq, Vq, 7, True, (3,), (7, 120), 64)
+    with pytest.raises(ValueError, match="buckets"):
+        knn.knn_tables_prefix_streaming(Vq, Vq, 7, True, (6, 3), (25,), 64)
+
+
+# ------------------------------------------------------------- surrogates
+def test_shuffle_surrogates_preserve_values():
+    from repro.inference import random_shuffle
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(200), jnp.float32)
+    s = np.asarray(random_shuffle(jax.random.PRNGKey(0), x, 5))
+    assert s.shape == (5, 200)
+    for row in s:
+        np.testing.assert_allclose(np.sort(row), np.sort(np.asarray(x)))
+    assert not np.array_equal(s[0], s[1])  # distinct draws
+
+
+def test_phase_surrogates_preserve_spectrum():
+    """FFT phase randomization: power spectrum (and hence mean and
+    autocovariance) preserved, series itself changed."""
+    from repro.inference import phase_randomized
+
+    rng = np.random.default_rng(2)
+    for L in (200, 201):  # even L exercises the Nyquist-bin branch
+        x = np.cumsum(rng.standard_normal(L)).astype(np.float32)
+        s = np.asarray(phase_randomized(jax.random.PRNGKey(3), jnp.asarray(x), 4))
+        P0 = np.abs(np.fft.rfft(x)) ** 2
+        P1 = np.abs(np.fft.rfft(s, axis=-1)) ** 2
+        np.testing.assert_allclose(P1, np.broadcast_to(P0, P1.shape), rtol=2e-3)
+        np.testing.assert_allclose(s.mean(axis=-1), x.mean(), rtol=1e-3)
+        assert np.abs(s - x).max() > 0.1  # actually randomized
+
+
+def test_surrogate_futures_deterministic_per_series_id():
+    """The fold_in(key, series_id) derivation makes the draw independent
+    of tile composition: the same series under the same id yields the
+    same futures whether batched alone or with others."""
+    from repro.inference import surrogate_futures
+
+    rng = np.random.default_rng(3)
+    cfg = EDMConfig(E_max=4)
+    ts = jnp.asarray(rng.standard_normal((3, 100)), jnp.float32)
+    key = jax.random.PRNGKey(9)
+    ids = jnp.asarray([5, 2, 7], jnp.int32)
+    full = np.asarray(surrogate_futures(key, ts, ids, n=4, kind="phase", cfg=cfg))
+    solo = np.asarray(
+        surrogate_futures(key, ts[1:2], ids[1:2], n=4, kind="phase", cfg=cfg)
+    )
+    np.testing.assert_array_equal(full.reshape(3, 4, -1)[1], solo.reshape(4, -1))
+    # different id -> different draw
+    other = np.asarray(
+        surrogate_futures(
+            key, ts[1:2], jnp.asarray([8], jnp.int32), n=4, kind="phase", cfg=cfg
+        )
+    )
+    assert not np.array_equal(solo, other)
+
+
+# ----------------------------------------------------------------- BH-FDR
+def test_bh_adjust_matches_scipy_oracle():
+    sp = pytest.importorskip("scipy.stats")
+    from repro.inference import bh_adjust
+
+    rng = np.random.default_rng(4)
+    for n in (1, 7, 100, 1000):
+        p = rng.uniform(size=n)
+        p[: n // 3] **= 4  # some small p-values
+        np.testing.assert_allclose(
+            bh_adjust(p), sp.false_discovery_control(p, method="bh"),
+            rtol=1e-12,
+        )
+
+
+def test_bh_threshold_consistent_with_adjust():
+    from repro.inference import bh_adjust, bh_threshold
+
+    rng = np.random.default_rng(5)
+    p = rng.uniform(size=500) ** 2
+    for alpha in (0.01, 0.05, 0.2):
+        thr, n = bh_threshold(p, alpha)
+        assert n == 500
+        np.testing.assert_array_equal(p <= thr, bh_adjust(p) <= alpha)
+
+
+def test_bh_threshold_discrete_matches_dense():
+    """The streaming per-value-count BH pass == the sorted-scan BH pass
+    on the expanded array, for discrete empirical p-values (with ties)."""
+    from repro.inference import bh_threshold, bh_threshold_discrete
+
+    rng = np.random.default_rng(6)
+    m = 19
+    for _ in range(5):
+        counts = rng.integers(0, 40, size=m + 1)
+        p = np.repeat(np.arange(1, m + 2) / (m + 1), counts)
+        for alpha in (0.01, 0.05, 0.3):
+            thr_d, n_d = bh_threshold_discrete(counts, m, alpha)
+            thr, n = bh_threshold(p, alpha)
+            assert n_d == n
+            assert thr_d == pytest.approx(thr, abs=1e-12)
+
+
+# ---------------------------------------------------------------- pearson
+def test_pearson_degenerate_and_overflow_finite():
+    """Constant (dead-neuron) and variance-overflow series must yield
+    rho = 0, never NaN/Inf, so significance masks stay finite."""
+    rng = np.random.default_rng(7)
+    b = jnp.asarray(rng.standard_normal(300), jnp.float32)
+    const = jnp.zeros(300)
+    big = jnp.asarray((rng.standard_normal(300) * 1e20), jnp.float32)
+    cases = [
+        pearson(const, b), pearson(b, const), pearson(const, const),
+        pearson(jnp.full((300,), 7.5), b),
+        pearson(big, big), pearson(big, b),
+    ]
+    out = np.asarray(jnp.stack(cases))
+    assert np.isfinite(out).all(), out
+    assert out[0] == out[1] == out[2] == 0.0
+    # sane values unaffected
+    assert float(pearson(b, b)) == pytest.approx(1.0, abs=1e-5)
+
+
+# ------------------------------------------- deprecated wrapper + stats
+def test_ccm_convergence_deprecated_wrapper(coupled_pair):
+    """Same signature, now routed through the batched prefix path: warns,
+    matches ccm_convergence_pair exactly, still shows convergence."""
+    from repro.core import ccm_convergence
+    from repro.inference import ccm_convergence_pair
+
+    cfg = EDMConfig(E_max=4)
+    x, y = jnp.asarray(coupled_pair[0]), jnp.asarray(coupled_pair[1])
+    key = jax.random.PRNGKey(0)
+    with pytest.warns(DeprecationWarning):
+        rhos = np.asarray(ccm_convergence(y, x, 3, (40, 150, 700), cfg, key))
+    direct = np.asarray(ccm_convergence_pair(y, x, 3, (40, 150, 700), cfg, key))
+    np.testing.assert_array_equal(rhos, direct)
+    assert rhos.shape == (3,)
+    assert rhos[-1] > rhos[0]
+
+
+def test_convergence_stats_known_curves():
+    from repro.inference import convergence_stats
+
+    curves = jnp.asarray(
+        [[0.1, 0.5, 0.3], [0.2, 0.4, 0.3], [0.3, 0.3, 0.3], [0.4, 0.2, 0.3]]
+    )  # (S=4, 3 pairs): increasing / decreasing / flat
+    drho, trend = (np.asarray(v) for v in convergence_stats(curves))
+    np.testing.assert_allclose(drho, [0.3, 0.3, 0.0], atol=1e-7)
+    np.testing.assert_allclose(trend, [1.0, -1.0, 0.0], atol=1e-7)
+
+
+# ----------------------------------------------------------- end to end
+@pytest.fixture(scope="module")
+def sig_system():
+    """4 series: x drives y (true edge x->y); a, b independent."""
+    from repro.core.pipeline import run_causal_inference
+    from repro.data.synthetic import coupled_logistic
+
+    x, y = coupled_logistic(600, beta_xy=0.0, beta_yx=0.12, seed=3)
+    a, b = coupled_logistic(600, beta_xy=0.0, beta_yx=0.0, seed=12)
+    ts = np.stack([x, y, a, b])
+    cfg = EDMConfig(E_max=5)
+    res = run_causal_inference(ts, cfg)
+    return ts, cfg, res
+
+
+def test_significance_end_to_end_fdr(sig_system):
+    """The true coupled-logistic edge survives BH-FDR; the decoupled pair
+    produces no edge in either direction."""
+    from repro.inference import SignificanceConfig, run_significance
+
+    ts, cfg, res = sig_system
+    sig = SignificanceConfig(
+        lib_sizes=(60, 150, 300, 570), n_surrogates=299, alpha=0.05, seed=0
+    )
+    out = run_significance(ts, res.optE, np.asarray(res.rho), cfg, sig)
+    assert out.n_tests == 12  # diagonal excluded
+    assert np.isfinite(out.pvals).all()
+    assert np.isfinite(out.drho).all() and np.isfinite(out.trend).all()
+    edges = {(int(e["src"]), int(e["dst"])) for e in out.edges}
+    assert (0, 1) in edges, (edges, out.pvals)  # x -> y survives
+    for pair in [(2, 3), (3, 2)]:  # decoupled pair: nothing
+        assert pair not in edges
+    # self-prediction converges: diagonal trend is maximal for the
+    # chaotic series (strictly increasing rho with library size)
+    assert out.trend[1, 1] == pytest.approx(1.0)
+
+
+def test_significance_store_matches_memory_and_resumes(sig_system, tmp_path):
+    """Streaming-store run == in-memory run bit-for-bit (non-dividing
+    column tiles, multiple chunks); a rerun over the complete store
+    resumes via the recount path and reproduces the same edges."""
+    import json
+
+    from repro.inference import SignificanceConfig, run_significance
+
+    ts, _, res = sig_system
+    cfg = EDMConfig(E_max=5, lib_block=2, target_tile=3)
+    sig = SignificanceConfig(
+        lib_sizes=(60, 300, 570), n_surrogates=39, alpha=0.2, seed=1
+    )
+    rho = np.asarray(res.rho)
+    mem = run_significance(ts, res.optE, rho, cfg, sig)
+    disk = run_significance(
+        ts, res.optE, rho, cfg, sig, out_dir=str(tmp_path)
+    )
+    for a in ("rho_conv", "rho_trend", "pvals"):
+        assert (tmp_path / a / "data.npy").exists()
+        assert (tmp_path / a / "meta.json").exists()
+    emeta = json.loads((tmp_path / "edges" / "meta.json").read_text())
+    assert emeta["n_edges"] == len(disk.edges)
+    assert emeta["seed"] == 1
+    np.testing.assert_array_equal(np.asarray(disk.pvals), mem.pvals)
+    np.testing.assert_array_equal(np.asarray(disk.drho), mem.drho)
+    np.testing.assert_array_equal(np.asarray(disk.trend), mem.trend)
+    np.testing.assert_array_equal(disk.edges, mem.edges)
+
+    # resume over the complete store: nothing recomputed, same outputs
+    again = run_significance(
+        ts, res.optE, rho, cfg, sig, out_dir=str(tmp_path)
+    )
+    assert again.p_threshold == mem.p_threshold
+    np.testing.assert_array_equal(np.asarray(again.pvals), mem.pvals)
+    np.testing.assert_array_equal(again.edges, mem.edges)
+
+
+def test_significance_seed_reproducibility(sig_system):
+    from repro.inference import SignificanceConfig, run_significance
+
+    ts, cfg, res = sig_system
+    rho = np.asarray(res.rho)
+    outs = [
+        run_significance(
+            ts, res.optE, rho, cfg,
+            SignificanceConfig(lib_sizes=(60, 570), n_surrogates=9, seed=s),
+        )
+        for s in (0, 0, 1)
+    ]
+    np.testing.assert_array_equal(outs[0].pvals, outs[1].pvals)
+    np.testing.assert_array_equal(np.asarray(outs[0].drho), outs[1].drho)
+    assert not np.array_equal(outs[0].pvals, outs[2].pvals)
