@@ -13,6 +13,14 @@ and the complexity-model extrapolation to the paper's own dataset sizes.
   Fig 9     -> multi-E table construction: cumulative-E scan vs per-E
                rebuild (the TPU analogue of the paper's GPU-vs-CPU kernel)
   roofline  -> summary of the dry-run table (benchmarks/results/dryrun)
+
+Regression gate: ``python benchmarks/run.py --check phase2 knn
+significance`` reruns the named benches with their JSON output
+redirected to benchmarks/results/fresh/ (CI uploads these as
+artifacts), compares the gated timings against the COMMITTED repo-root
+BENCH_*.json baselines, and exits nonzero on any >1.5x slowdown.
+Refresh a baseline by running the bench WITHOUT --check (writes the
+repo-root JSON) and committing it.
 """
 from __future__ import annotations
 
@@ -45,6 +53,14 @@ from repro.data.synthetic import dummy_brain  # noqa: E402
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 REPO = pathlib.Path(__file__).resolve().parents[1]
+# Where benches write their BENCH_*.json: the repo root by default
+# (committed baselines), benchmarks/results/fresh/ under --check.
+BENCH_DIR = REPO
+
+
+def _write_bench(name: str, out: dict) -> None:
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    (BENCH_DIR / name).write_text(json.dumps(out, indent=2))
 
 
 def _time(fn, *args, reps=3) -> float:
@@ -417,7 +433,7 @@ def phase2_engine_bench(N=128, L=1000, E_max=20, engine="reference", tile=32):
         "max_abs_drho": err,
         "max_abs_drho_tiled": err_tiled,
     }
-    (REPO / "BENCH_phase2.json").write_text(json.dumps(out, indent=2))
+    _write_bench("BENCH_phase2.json", out)
     return out
 
 
@@ -527,7 +543,7 @@ def knn_selection_bench(Lc_sweep=(1000, 2000, 4000), Lq=128, N=128,
         f"slab_s={times['slab']:.3f};stream_s={times['streaming']:.3f};"
         f"auto_vs_slab={times['auto'] / times['slab']:.2f}x",
     )
-    (REPO / "BENCH_knn.json").write_text(json.dumps(out, indent=2))
+    _write_bench("BENCH_knn.json", out)
     return out
 
 
@@ -600,7 +616,7 @@ def significance_bench(N=128, L=1000, E_max=20, rows=8, n_sizes=6):
         "speedup": speedup,
         "candidate_cols_ratio": sum(lib_sizes) / lib_sizes[-1],
     }
-    (REPO / "BENCH_significance.json").write_text(json.dumps(out, indent=2))
+    _write_bench("BENCH_significance.json", out)
     return out
 
 
@@ -638,14 +654,115 @@ BENCHES = {
 }
 
 
+# --------------------------------------------- bench regression gate (CI)
+#: bench name -> (baseline JSON, gated timing fields as key paths).
+#: Gated fields are WALL TIMES ONLY — derived ratios (speedups) divide
+#: out machine speed and working-set bytes are deterministic, so a
+#: straight fresh/baseline ratio on the timings is the regression signal.
+GATES: dict[str, tuple[str, list[tuple[str, ...]]]] = {
+    "phase2": (
+        "BENCH_phase2.json",
+        [("seed_path", "phase2_s"), ("new_path", "phase2_s"),
+         ("tiled_path", "phase2_s")],
+    ),
+    "knn": (
+        "BENCH_knn.json",
+        [("phase1", "auto_s"), ("phase1", "slab_s"),
+         ("phase1", "streaming_s")],
+    ),
+    "significance": (
+        "BENCH_significance.json",
+        [("one_sweep_chunk_s",), ("rebuild_chunk_s",)],
+    ),
+}
+# Absolute wall-time gate (the committed contract).  Baselines are only
+# meaningful for the machine class they were measured on: promote a
+# bench-gate run's uploaded fresh JSONs to the committed baselines the
+# first time the gate runs on a new runner class, rather than comparing
+# a CI runner against a workstation.  BENCH_GATE_LIMIT overrides the
+# ratio for machines with known constant offsets.
+SLOWDOWN_LIMIT = float(os.environ.get("BENCH_GATE_LIMIT", "1.5"))
+
+
+def _dig(d: dict, path: tuple[str, ...]) -> float:
+    for k in path:
+        d = d[k]
+    return float(d)
+
+
+def check_regressions(names: list[str], floor: dict | None = None) -> list[str]:
+    """Compare fresh BENCH_DIR timings against committed repo-root
+    baselines; print one verdict row per gated field and return the
+    bench names with violations (>SLOWDOWN_LIMIT x).  ``floor`` carries
+    the best fresh timing seen so far per field across retry passes —
+    shared-runner wall clocks are noisy, so a field only regresses if
+    its BEST observation is slow."""
+    bad: list[str] = []
+    floor = {} if floor is None else floor
+    for name in names:
+        if name not in GATES:
+            continue
+        fname, fields = GATES[name]
+        base_f, fresh_f = REPO / fname, BENCH_DIR / fname
+        if not base_f.exists():
+            print(f"gate,{fname},SKIP_no_committed_baseline")
+            continue
+        base = json.loads(base_f.read_text())
+        fresh = json.loads(fresh_f.read_text())
+        for path in fields:
+            key = f"{fname}:{'.'.join(path)}"
+            b = _dig(base, path)
+            f = min(_dig(fresh, path), floor.get(key, float("inf")))
+            floor[key] = f
+            ratio = f / b if b > 0 else float("inf")
+            verdict = "OK" if ratio <= SLOWDOWN_LIMIT else "REGRESSION"
+            if verdict != "OK" and name not in bad:
+                bad.append(name)
+            print(
+                f"gate,{key},"
+                f"base={b:.3f}s;fresh={f:.3f}s;ratio={ratio:.2f}x;{verdict}"
+            )
+    return bad
+
+
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    global BENCH_DIR
+    args = sys.argv[1:]
+    check = "--check" in args
+    bad_flags = [a for a in args if a.startswith("--") and a != "--check"]
+    if bad_flags:
+        # A typo'd --check must fail loudly, not silently skip the gate.
+        sys.exit(f"unknown option(s) {bad_flags}; the only flag is --check")
+    names = [a for a in args if not a.startswith("--")] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         sys.exit(f"unknown bench(es) {unknown}; available: {list(BENCHES)}")
+    if check:
+        gated = [n for n in names if n in GATES]
+        if not gated:
+            sys.exit(f"--check needs at least one gated bench: {list(GATES)}")
+        BENCH_DIR = RESULTS / "fresh"  # keep committed baselines untouched
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name]()
+    if check:
+        floor: dict = {}
+        bad = check_regressions(names, floor)
+        if bad:
+            # One retry of only the offending benches: transient runner
+            # noise clears (best-of-2 per field), real regressions persist.
+            print(f"gate,retry,rerunning_{'+'.join(bad)}_once")
+            for name in bad:
+                BENCHES[name]()
+            bad = check_regressions(bad, floor)
+        if bad:
+            sys.exit(
+                f"bench regression gate FAILED: {bad} slower than "
+                f"{SLOWDOWN_LIMIT}x baseline (see gate rows above; refresh "
+                "baselines by rerunning without --check and committing the "
+                "repo-root BENCH_*.json)"
+            )
+        print(f"gate,all,within_{SLOWDOWN_LIMIT}x_of_baselines")
 
 
 if __name__ == "__main__":

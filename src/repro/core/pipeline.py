@@ -364,6 +364,59 @@ def _phase2_tiled(
         writer.commit()  # defensive: deferred entries are never left behind
 
 
+def run_phase1(
+    ts: np.ndarray, cfg: EDMConfig, mesh=None, on_chunk=None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Phase 1 (simplex projection) alone: (simplex_rhos (N, E_max),
+    optE (N,) int32).  Fleet workers call this under the ``phase1`` work
+    unit; the result is the one whole-run broadcast the paper's design
+    allows (SSIII-C), persisted to the shared store for every other
+    worker to load.  on_chunk(row0) fires before each chunk dispatch —
+    fleet workers renew their unit lease there (the whole-run phase-1
+    unit can outlive a TTL on cold compile caches)."""
+    if mesh is None:
+        mesh = default_mesh()
+    N = ts.shape[0]
+    chunk = mesh.size * cfg.lib_block
+    simplex_fn = make_simplex_fn(mesh, cfg)
+    rhos_parts, optE_parts = [], []
+    for row0 in range(0, N, chunk):
+        if on_chunk is not None:
+            on_chunk(row0)
+        rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
+        rhos_c, optE_c = simplex_fn(jnp.asarray(rows))
+        rhos_parts.append(np.asarray(rhos_c))
+        optE_parts.append(np.asarray(optE_c))
+    simplex_rhos = np.concatenate(rhos_parts)[:N]
+    optE = np.concatenate(optE_parts)[:N].astype(np.int32)
+    return simplex_rhos, optE
+
+
+def run_phase2_chunks(
+    ts: np.ndarray,
+    ts_fut: np.ndarray,
+    optE: np.ndarray,
+    cfg: EDMConfig,
+    mesh,
+    chunk_plan: list[tuple[int, int]],
+    writer: Optional[TileWriter] = None,
+    rho: Optional[np.ndarray] = None,
+    progress: bool = False,
+) -> None:
+    """Phase 2 over an EXPLICIT (row0, nrows) chunk plan — the claimable
+    compute unit of the work queue (DESIGN.md SS10).
+
+    Values are geometry-independent (kNN tables are per library row,
+    targets per column), so any partition of the rows across calls —
+    or across worker processes writing through writer_id-sharded
+    TileWriters — produces bit-identical blocks.  ``writer`` streams
+    blocks to the store; with ``rho`` they land in a host map instead.
+    """
+    chunk = mesh.size * cfg.lib_block
+    phase2 = _phase2_tiled if cfg.target_tile else _phase2_untiled
+    phase2(ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress)
+
+
 def run_causal_inference(
     ts: np.ndarray,
     cfg: EDMConfig,
@@ -380,20 +433,11 @@ def run_causal_inference(
     """
     if mesh is None:
         mesh = default_mesh()
-    n_workers = mesh.size
     N, L = ts.shape
-    chunk = n_workers * cfg.lib_block
+    chunk = mesh.size * cfg.lib_block
 
     # ---- phase 1: simplex projection -> optE --------------------------
-    simplex_fn = make_simplex_fn(mesh, cfg)
-    rhos_parts, optE_parts = [], []
-    for row0 in range(0, N, chunk):
-        rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
-        rhos_c, optE_c = simplex_fn(jnp.asarray(rows))
-        rhos_parts.append(np.asarray(rhos_c))
-        optE_parts.append(np.asarray(optE_c))
-    simplex_rhos = np.concatenate(rhos_parts)[:N]
-    optE = np.concatenate(optE_parts)[:N].astype(np.int32)
+    simplex_rhos, optE = run_phase1(ts, cfg, mesh)
 
     # ---- phase 2: all-to-all CCM, streamed (row-chunk x col-tile) ------
     ts_fut = np.asarray(ccm.all_futures(jnp.asarray(ts), cfg))
@@ -407,8 +451,9 @@ def run_causal_inference(
     else:
         chunk_plan = [(r, min(chunk, N - r)) for r in range(0, N, chunk)]
 
-    phase2 = _phase2_tiled if cfg.target_tile else _phase2_untiled
-    phase2(ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress)
+    run_phase2_chunks(
+        ts, ts_fut, optE, cfg, mesh, chunk_plan, writer, rho, progress
+    )
 
     if writer is not None:
         rho = writer.assemble(

@@ -7,9 +7,59 @@ small-random-write pattern that bottlenecked GPFS, SSIII-C)."""
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 
 import numpy as np
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    """Best-effort directory fsync after a rename (durability of the
+    rename itself; no-op where unsupported)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _unique_tmp(path: pathlib.Path) -> pathlib.Path:
+    """Collision-free temp sibling (pid alone is not enough: threads of
+    one process may write the same target concurrently)."""
+    return path.parent / f"{path.name}.tmp-{os.getpid()}-{os.urandom(4).hex()}"
+
+
+def atomic_write_text(path: str | pathlib.Path, text: str) -> None:
+    """write-temp + fsync + os.replace: a writer killed at any point
+    leaves the old file or the new file, never a torn mix.  The ONE
+    durability primitive of the store AND the work queue (workqueue.py
+    imports it) — keep fixes here, not in copies."""
+    path = pathlib.Path(path)
+    tmp = _unique_tmp(path)
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(path.parent)
+
+
+def atomic_save_npy(path: pathlib.Path, arr: np.ndarray) -> None:
+    """Atomic np.save — the shared-store write primitive: concurrent
+    duplicate writers (lease-steal races) replace each other with
+    identical bytes instead of interleaving."""
+    tmp = _unique_tmp(path)
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(path.parent)
 
 
 def save_meta(
@@ -19,15 +69,18 @@ def save_meta(
     e.g. a causal map assembled straight into <name>/data.npy)."""
     p = pathlib.Path(path)
     p.mkdir(parents=True, exist_ok=True)
-    (p / "meta.json").write_text(
-        json.dumps({"shape": list(shape), "dtype": str(dtype), **(meta or {})})
+    atomic_write_text(
+        p / "meta.json",
+        json.dumps({"shape": list(shape), "dtype": str(dtype), **(meta or {})}),
     )
 
 
 def save_dataset(path: str | pathlib.Path, ts: np.ndarray, meta: dict | None = None):
     p = pathlib.Path(path)
     p.mkdir(parents=True, exist_ok=True)
-    np.save(p / "data.npy", ts)
+    # Atomic: a driver killed mid-save must not leave a torn data.npy
+    # that a later existence check (fleet resume) would trust.
+    atomic_save_npy(p / "data.npy", ts)
     save_meta(p, ts.shape, ts.dtype, meta)
 
 
@@ -65,19 +118,69 @@ class TileWriter:
     blocks (col_order.npy), verified on resume, and undone at
     :meth:`assemble` time.  Full-width row blocks are always written in
     natural column order (the pipeline unsorts before writing).
+
+    ``writer_id``: multi-process fleets (DESIGN.md SS10) give each
+    worker its own id; the worker then commits its manifest entries to a
+    private shard ``blocks.<id>.json`` — no cross-process manifest lock
+    is ever needed, because no two processes write the same file.  Every
+    writer (and plain readers, writer_id=None) LOADS the union of all
+    shards, so coverage, chunk_plan, and assemble always see every
+    durable block regardless of who wrote it.  All writes (tiles, blocks,
+    manifests, col_order) are write-temp + fsync + os.replace, so a
+    worker SIGKILLed mid-write can never corrupt shared resume state —
+    and duplicate computation of a unit (lease-steal race) replaces
+    tiles with identical bytes instead of interleaving.
     """
 
-    def __init__(self, path: str | pathlib.Path, N: int, M: int | None = None):
+    def __init__(
+        self,
+        path: str | pathlib.Path,
+        N: int,
+        M: int | None = None,
+        writer_id: str | None = None,
+    ):
         self.dir = pathlib.Path(path)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.N = N
         self.M = N if M is None else M
-        self.manifest = self.dir / "blocks.json"
-        self.done: dict[str, object] = (
+        if writer_id is not None and not writer_id.isidentifier():
+            raise ValueError(f"writer_id={writer_id!r} must be identifier-like")
+        self.writer_id = writer_id
+        self.manifest = self.dir / (
+            "blocks.json" if writer_id is None else f"blocks.{writer_id}.json"
+        )
+        # _own: entries THIS writer commits (its manifest shard's content);
+        # done: the merged all-shards view used for coverage and assembly.
+        self._own: dict[str, object] = (
             json.loads(self.manifest.read_text()) if self.manifest.exists() else {}
         )
+        self.done: dict[str, object] = {}
+        self.refresh()
         co = self.dir / "col_order.npy"
         self._col_order: np.ndarray | None = np.load(co) if co.exists() else None
+
+    def _manifest_shards(self):
+        """blocks.json plus every blocks.<writer>.json (skip .tmp residue
+        of a killed writer — only fully-replaced manifests count)."""
+        for p in sorted(self.dir.glob("blocks*.json")):
+            if p.suffix == ".json":
+                yield p
+
+    def refresh(self) -> "TileWriter":
+        """Re-merge every manifest shard from disk (fleet workers call
+        this to observe blocks other processes committed); uncommitted
+        in-memory entries of THIS writer are kept."""
+        merged: dict[str, object] = {}
+        for p in self._manifest_shards():
+            try:
+                merged.update(json.loads(p.read_text()))
+            except ValueError:
+                # a shard torn by a foreign non-atomic writer: ignore —
+                # its tiles resurface as uncovered and are recomputed
+                continue
+        merged.update(self._own)
+        self.done = merged
+        return self
 
     # ------------------------------------------------------------ coverage
     def _blocks(self):
@@ -164,9 +267,10 @@ class TileWriter:
 
     # ------------------------------------------------------------- writing
     def _commit(self) -> None:
-        tmp = self.manifest.with_suffix(".tmp")
-        tmp.write_text(json.dumps(self.done))
-        tmp.rename(self.manifest)
+        # Only THIS writer's entries go to its shard; merged `done` stays
+        # a read-side view (rewriting it here would cross-duplicate other
+        # workers' entries into this shard).
+        atomic_write_text(self.manifest, json.dumps(self._own))
 
     def ensure_col_order(self, order: np.ndarray | None) -> None:
         """Declare (and persist) the on-disk column permutation for tile
@@ -193,14 +297,17 @@ class TileWriter:
                 f"store {self.dir} already holds natural-order tiles; "
                 "cannot add column-permuted tiles (use a fresh --out dir)"
             )
-        np.save(f, want)
+        # Atomic replace: concurrent fleet workers race this benignly —
+        # both derive the same permutation from the shared phase-1 optE,
+        # so whoever lands second replaces identical bytes.
+        atomic_save_npy(f, want)
         self._col_order = want
 
     def write_block(self, row0: int, rho_rows: np.ndarray):
         """Full-width row block (legacy single-tile path)."""
         rho_rows = rho_rows[: max(0, self.N - row0)]
-        np.save(self.dir / f"rows_{row0:08d}.npy", rho_rows)
-        self.done[str(row0)] = int(rho_rows.shape[0])
+        atomic_save_npy(self.dir / f"rows_{row0:08d}.npy", rho_rows)
+        self.done[str(row0)] = self._own[str(row0)] = int(rho_rows.shape[0])
         self._commit()
 
     def write_tile(self, row0: int, col0: int, block: np.ndarray,
@@ -215,8 +322,9 @@ class TileWriter:
         merely recomputed on resume (the .npy itself is durable before
         the manifest ever mentions it)."""
         block = block[: max(0, self.N - row0), : max(0, self.M - col0)]
-        np.save(self.dir / f"tile_{row0:08d}_{col0:08d}.npy", block)
-        self.done[f"{row0},{col0}"] = [int(block.shape[0]), int(block.shape[1])]
+        atomic_save_npy(self.dir / f"tile_{row0:08d}_{col0:08d}.npy", block)
+        entry = [int(block.shape[0]), int(block.shape[1])]
+        self.done[f"{row0},{col0}"] = self._own[f"{row0},{col0}"] = entry
         if commit:
             self._commit()
 

@@ -8,7 +8,11 @@ from repro.inference.convergence import (
     convergence_stats,
     subsample_permutation,
 )
-from repro.inference.pipeline import run_significance
+from repro.inference.pipeline import (
+    SignificanceChunkRunner,
+    finalize_significance,
+    run_significance,
+)
 from repro.inference.significance import (
     assemble_edges,
     bh_adjust,
@@ -28,9 +32,11 @@ from repro.inference.types import (
 
 __all__ = [
     "EDGE_DTYPE",
+    "SignificanceChunkRunner",
     "SignificanceConfig",
     "SignificanceResult",
     "assemble_edges",
+    "finalize_significance",
     "bh_adjust",
     "bh_threshold",
     "bh_threshold_discrete",

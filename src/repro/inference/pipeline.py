@@ -129,11 +129,145 @@ def make_null_tile_fn(mesh, cfg: EDMConfig, m: int):
     return for_plan
 
 
+# ----------------------------------------------------- chunk-level compute
+class SignificanceChunkRunner:
+    """Compiled per-chunk significance compute — convergence tables and
+    tile reductions, surrogate-null batches — decoupled from chunk
+    PLANNING and finalization, so a fleet worker (DESIGN.md SS10) can
+    run exactly the row chunks it claims from the work queue while the
+    single-process driver runs them all.
+
+    Everything that must agree across workers for bit-identity is
+    derived here from shared inputs only: the bucket plan and column
+    order from phase-1 optE, the subsampling permutation and surrogate
+    keys from sig.seed (per-target fold_in — independent of chunk/tile
+    geometry).  ``run`` then computes any subset of row chunks and
+    drains blocks through the caller's sink.
+    """
+
+    def __init__(self, ts: np.ndarray, optE: np.ndarray, cfg: EDMConfig,
+                 sig: SignificanceConfig, mesh=None):
+        if mesh is None:
+            mesh = default_mesh()
+        self.mesh, self.cfg, self.sig = mesh, cfg, sig
+        N, L = ts.shape
+        self.N = N
+        Lp = cfg.n_points(L)
+        self.do_conv = bool(sig.lib_sizes)
+        self.do_null = sig.n_surrogates > 0
+        if self.do_conv and sig.lib_sizes[-1] > Lp:
+            raise ValueError(
+                f"lib_sizes[-1]={sig.lib_sizes[-1]} exceeds the {Lp} "
+                f"embeddable library points of length-{L} series "
+                f"(E_max={cfg.E_max}, tau={cfg.tau}, Tp={cfg.Tp})"
+            )
+        self.m = sig.n_surrogates
+        self.chunk = mesh.size * cfg.lib_block
+        self.T = cfg.target_tile or N
+        self.ts = ts
+        optE = np.asarray(optE, np.int32)
+        self.plan, self.order = ccm.make_bucket_plan(optE)
+        self.tile_plans = ccm.make_tile_plans(self.plan, self.T)
+        self.ts_fut = np.asarray(ccm.all_futures(jnp.asarray(ts), cfg))
+
+        key = jax.random.PRNGKey(sig.seed)
+        perm_key, self.surr_key = jax.random.split(key)
+        self.col_ids = convergence.subsample_permutation(perm_key, Lp)
+
+        self.conv_tables_fn = self.conv_tile_for = None
+        self.full_tables_fn = self.null_tile_for = None
+        if self.do_conv:
+            self.conv_tables_fn = make_conv_tables_fn(
+                mesh, cfg, self.plan, sig.lib_sizes
+            )
+            self.conv_tile_for = make_conv_tile_fn(mesh, cfg)
+        if self.do_null:
+            self.full_tables_fn = make_ccm_tables_fn_bucketed(
+                mesh, cfg, self.plan
+            )
+            self.null_tile_for = make_null_tile_fn(mesh, cfg, self.m)
+
+    def run(self, plan_chunks, rho, drain, on_chunk=None) -> None:
+        """Compute the given (row0, valid) chunks, draining ("conv"|
+        "pval", row0, c0, valid)-tagged blocks in submission order.
+
+        rho: the observed causal map (memmap fine; only read when the
+        null stage is active).  on_chunk(row0) fires before each chunk's
+        dispatch — fleet workers renew their unit lease there.
+        """
+        N, T, m, sig, cfg = self.N, self.T, self.m, self.sig, self.cfg
+        order, ts, ts_fut = self.order, self.ts, self.ts_fut
+        with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+            for row0, valid in plan_chunks:
+                if on_chunk is not None:
+                    on_chunk(row0)
+                rows = _pad_rows(ts[row0 : row0 + self.chunk], self.chunk)
+                rows_j = jnp.asarray(rows)
+                rho_chunk = (
+                    np.asarray(rho[row0 : row0 + valid])
+                    if self.do_null else None
+                )
+                if self.do_conv:
+                    cidx, cw = self.conv_tables_fn(rows_j, self.col_ids)
+                if self.do_null:
+                    fidx, fw = self.full_tables_fn(rows_j)
+                for c0, seg_plan in self.tile_plans:
+                    c1 = min(c0 + T, N)
+                    orig = order[c0:c1]
+                    if self.do_conv:
+                        fut_tile = jnp.asarray(ts_fut[orig])
+                        streamer.submit(
+                            ("conv", row0, c0, valid),
+                            self.conv_tile_for(seg_plan)(cidx, cw, fut_tile),
+                        )
+                    if self.do_null:
+                        # Regenerated per (chunk, tile) like _phase2_tiled's
+                        # fut_tile upload: keeping every tile's (t*m, Lp)
+                        # surrogate batch resident would defeat the tiling
+                        # at scale, and the per-tile FFT is dominated by
+                        # the m x lookup work the tile triggers anyway.
+                        fut_surr = surrogates.surrogate_futures(
+                            self.surr_key, jnp.asarray(ts[orig]),
+                            jnp.asarray(orig.astype(np.int32)),
+                            n=m, kind=sig.surrogate, cfg=cfg,
+                        )
+                        rho_obs = jnp.asarray(
+                            _pad_rows(rho_chunk[:, orig], self.chunk)
+                        )
+                        streamer.submit(
+                            ("pval", row0, c0, valid),
+                            self.null_tile_for(seg_plan)(
+                                fidx, fw, fut_surr, rho_obs
+                            ),
+                        )
+
+
 # ------------------------------------------------------------------- driver
-def _writer(out_dir, name: str, N: int, order) -> TileWriter:
-    w = TileWriter(f"{out_dir}/{name}", N)
+def _writer(
+    out_dir, name: str, N: int, order, writer_id: str | None = None
+) -> TileWriter:
+    w = TileWriter(f"{out_dir}/{name}", N, writer_id=writer_id)
     w.ensure_col_order(order)
     return w
+
+
+def make_store_drain(N: int, conv_w, trend_w, pv_w):
+    """Tile-store sink for :meth:`SignificanceChunkRunner.run` blocks —
+    the ONE place that knows the block routing (conv stacks [drho;
+    trend], pval is flat) and the per-chunk commit-batching policy.
+    Shared by the in-process driver and fleet workers so the on-disk
+    layout can never diverge between them (W=1 ≡ W=4 byte-identity)."""
+
+    def drain(tag, block):
+        kind, row0, c0, valid = tag
+        last = c0 + block.shape[-1] >= N
+        if kind == "conv":
+            conv_w.write_tile(row0, c0, block[0][:valid], commit=last)
+            trend_w.write_tile(row0, c0, block[1][:valid], commit=last)
+        else:
+            pv_w.write_tile(row0, c0, block[:valid], commit=last)
+
+    return drain
 
 
 def _check_resume_config(out_dir, sig: SignificanceConfig) -> None:
@@ -165,7 +299,8 @@ def _check_resume_config(out_dir, sig: SignificanceConfig) -> None:
             )
         return
     f.parent.mkdir(parents=True, exist_ok=True)
-    f.write_text(json.dumps(want))
+    # Atomic + idempotent: concurrent fleet workers write identical bytes.
+    store.atomic_write_text(f, json.dumps(want))
 
 
 def run_significance(
@@ -187,40 +322,12 @@ def run_significance(
     ``out_dir`` every artifact streams through a TileWriter (resumable)
     and the returned maps are disk-backed memmaps.
     """
-    if mesh is None:
-        mesh = default_mesh()
-    N, L = ts.shape
-    Lp = cfg.n_points(L)
-    do_conv = bool(sig.lib_sizes)
-    do_null = sig.n_surrogates > 0
-    if not (do_conv or do_null):
+    if not (sig.lib_sizes or sig.n_surrogates > 0):
         return SignificanceResult(None, None, None, None)
-    if do_conv and sig.lib_sizes[-1] > Lp:
-        raise ValueError(
-            f"lib_sizes[-1]={sig.lib_sizes[-1]} exceeds the {Lp} embeddable "
-            f"library points of length-{L} series (E_max={cfg.E_max}, "
-            f"tau={cfg.tau}, Tp={cfg.Tp})"
-        )
-    m = sig.n_surrogates
-    chunk = mesh.size * cfg.lib_block
-    T = cfg.target_tile or N
-
-    optE = np.asarray(optE, np.int32)
-    plan, order = ccm.make_bucket_plan(optE)
-    tile_plans = ccm.make_tile_plans(plan, T)
-    ts_fut = np.asarray(ccm.all_futures(jnp.asarray(ts), cfg))
-
-    key = jax.random.PRNGKey(sig.seed)
-    perm_key, surr_key = jax.random.split(key)
-    col_ids = convergence.subsample_permutation(perm_key, Lp)
-
-    conv_tables_fn = conv_tile_for = full_tables_fn = null_tile_for = None
-    if do_conv:
-        conv_tables_fn = make_conv_tables_fn(mesh, cfg, plan, sig.lib_sizes)
-        conv_tile_for = make_conv_tile_fn(mesh, cfg)
-    if do_null:
-        full_tables_fn = make_ccm_tables_fn_bucketed(mesh, cfg, plan)
-        null_tile_for = make_null_tile_fn(mesh, cfg, m)
+    runner = SignificanceChunkRunner(ts, optE, cfg, sig, mesh)
+    N = runner.N
+    do_conv, do_null = runner.do_conv, runner.do_null
+    m, chunk, order = runner.m, runner.chunk, runner.order
 
     # ---- outputs: streaming writers or (small-N) dense host maps -------
     if out_dir is not None:
@@ -246,82 +353,107 @@ def run_significance(
     # threshold exactly — no dense p array, no sort (DESIGN.md SS9).
     p_counts = np.zeros(m + 1, np.int64)
 
+    store_drain = (
+        make_store_drain(N, conv_w, trend_w, pv_w) if out_dir is not None
+        else None
+    )
+
     def drain(tag, block):
         kind, row0, c0, valid = tag
         cols = order[c0 : c0 + block.shape[-1]]
         last = c0 + block.shape[-1] >= N
-        if kind == "conv":
-            drho_b, trend_b = block[0][:valid], block[1][:valid]
-            if conv_w is not None:
-                conv_w.write_tile(row0, c0, drho_b, commit=last)
-                trend_w.write_tile(row0, c0, trend_b, commit=last)
-            else:
-                drho_map[row0 : row0 + valid, cols] = drho_b
-                trend_map[row0 : row0 + valid, cols] = trend_b
-        else:
+        if kind == "pval":
             pv_b = block[:valid]
             offdiag = cols[None, :] != (row0 + np.arange(valid))[:, None]
             p_counts[:] += np.bincount(
                 np.rint(pv_b[offdiag] * (m + 1)).astype(np.int64) - 1,
                 minlength=m + 1,
             )
-            if pv_w is not None:
-                pv_w.write_tile(row0, c0, pv_b, commit=last)
-            else:
-                pv_map[row0 : row0 + valid, cols] = pv_b
+        if store_drain is not None:
+            store_drain(tag, block)
+        elif kind == "conv":
+            drho_map[row0 : row0 + valid, cols] = block[0][:valid]
+            trend_map[row0 : row0 + valid, cols] = block[1][:valid]
+        else:
+            pv_map[row0 : row0 + valid, cols] = block[:valid]
         # One line per row chunk: the pval drain when the null stage runs
         # (it lands last), else the conv drain.
         if progress and last and (kind == "pval" or not do_null):
             print(f"significance rows {row0}..{row0 + valid} / {N}")
 
     resumed_rows = N - sum(v for _, v in plan_chunks)
-    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
-        for row0, valid in plan_chunks:
-            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
-            rows_j = jnp.asarray(rows)
-            rho_chunk = np.asarray(rho[row0 : row0 + valid]) if do_null else None
-            if do_conv:
-                cidx, cw = conv_tables_fn(rows_j, col_ids)
-            if do_null:
-                fidx, fw = full_tables_fn(rows_j)
-            for c0, seg_plan in tile_plans:
-                c1 = min(c0 + T, N)
-                orig = order[c0:c1]
-                if do_conv:
-                    fut_tile = jnp.asarray(ts_fut[orig])
-                    streamer.submit(
-                        ("conv", row0, c0, valid),
-                        conv_tile_for(seg_plan)(cidx, cw, fut_tile),
-                    )
-                if do_null:
-                    # Regenerated per (chunk, tile) like _phase2_tiled's
-                    # fut_tile upload: keeping every tile's (t*m, Lp)
-                    # surrogate batch resident would defeat the tiling at
-                    # scale, and the per-tile FFT is dominated by the m x
-                    # lookup work the tile triggers anyway.
-                    fut_surr = surrogates.surrogate_futures(
-                        surr_key, jnp.asarray(ts[orig]),
-                        jnp.asarray(orig.astype(np.int32)),
-                        n=m, kind=sig.surrogate, cfg=cfg,
-                    )
-                    rho_obs = jnp.asarray(
-                        _pad_rows(rho_chunk[:, orig], chunk)
-                    )
-                    streamer.submit(
-                        ("pval", row0, c0, valid),
-                        null_tile_for(seg_plan)(fidx, fw, fut_surr, rho_obs),
-                    )
+    runner.run(plan_chunks, rho, drain)
 
     # ---- assembly ------------------------------------------------------
+    if out_dir is not None:
+        for w in writers:
+            w.commit()
+        # Chunks already durable from a prior run never re-drained, so
+        # their p-value counts are recovered from the assembled map
+        # (p_counts=None -> recount inside the finalizer).
+        return _finalize_store(
+            cfg, sig, rho, conv_w=conv_w, trend_w=trend_w, pv_w=pv_w,
+            p_counts=None if resumed_rows else p_counts, progress=progress,
+        )
+
+    p_threshold, edges = 0.0, None
+    n_tests = int(p_counts.sum())
+    if do_null:
+        p_threshold, p_cut = _bh_cut(p_counts, m, sig.alpha)
+        edges = significance.assemble_edges(
+            pv_map, rho, drho_map, trend_map, p_cut
+        )
+        if progress:
+            print(
+                f"BH-FDR alpha={sig.alpha}: p* = {p_threshold:.4g} over "
+                f"{n_tests} tests -> {0 if edges is None else len(edges)} edges"
+            )
+
+    return SignificanceResult(
+        drho=drho_map, trend=trend_map, pvals=pv_map, edges=edges,
+        p_threshold=p_threshold, n_tests=n_tests,
+    )
+
+
+def _bh_cut(p_counts: np.ndarray, m: int, alpha: float) -> tuple[float, float]:
+    """(p_threshold, edge cut).  p-values in the map are float32 of
+    j/(m+1); the cut sits at the MIDPOINT between discrete levels so the
+    threshold level itself is always included regardless of f32-vs-f64
+    rounding of the quotient."""
+    p_threshold, _ = significance.bh_threshold_discrete(p_counts, m, alpha)
+    p_cut = p_threshold + 0.5 / (m + 1) if p_threshold > 0 else 0.0
+    return p_threshold, p_cut
+
+
+def _finalize_store(
+    cfg: EDMConfig,
+    sig: SignificanceConfig,
+    rho: np.ndarray,
+    *,
+    conv_w: Optional[TileWriter],
+    trend_w: Optional[TileWriter],
+    pv_w: Optional[TileWriter],
+    p_counts: Optional[np.ndarray] = None,
+    progress: bool = False,
+) -> SignificanceResult:
+    """Assembly + exact discrete BH + edge list over store artifacts.
+
+    Idempotent, and runnable by a process that computed NONE of the
+    chunks (the fleet's ``finalize`` unit): with ``p_counts=None`` the
+    per-value histogram is recovered by row-streaming the assembled
+    p map — the recount-on-resume path, now also the recount-on-
+    distributed-completion path (workers' streamed counts only ever
+    cover their own chunks, so a fleet always recounts).
+    """
+    m = sig.n_surrogates
     meta_common = {
         "lib_sizes": list(sig.lib_sizes),
         "n_surrogates": m,
         "surrogate": sig.surrogate,
         "seed": sig.seed,
     }
+    drho_map = trend_map = pv_map = None
     if conv_w is not None:
-        conv_w.commit()
-        trend_w.commit()
         drho_map = conv_w.assemble(mmap_path=conv_w.dir / "data.npy")
         trend_map = trend_w.assemble(mmap_path=trend_w.dir / "data.npy")
         store.save_meta(
@@ -333,51 +465,68 @@ def run_significance(
             {**meta_common, "stat": "monotonic_trend"},
         )
 
-    p_threshold, edges = 0.0, None
-    n_tests = int(p_counts.sum())
-    if do_null:
-        if pv_w is not None:
-            pv_w.commit()
-            pv_map = pv_w.assemble(mmap_path=pv_w.dir / "data.npy")
-        if resumed_rows:
-            # Chunks already durable from a prior run never re-drained, so
-            # their p-value counts are recovered from the assembled map.
+    p_threshold, edges, n_tests = 0.0, None, 0
+    if pv_w is not None:
+        pv_map = pv_w.assemble(mmap_path=pv_w.dir / "data.npy")
+        if p_counts is None:
             n_tests, p_counts = _recount_pvals(pv_map, m)
-        p_threshold, _ = significance.bh_threshold_discrete(
-            p_counts, m, sig.alpha
-        )
-        # p-values in the map are float32 of j/(m+1); cut at the MIDPOINT
-        # between discrete levels so the threshold level itself is always
-        # included regardless of f32-vs-f64 rounding of the quotient.
-        p_cut = p_threshold + 0.5 / (m + 1) if p_threshold > 0 else 0.0
+        else:
+            n_tests = int(p_counts.sum())
+        p_threshold, p_cut = _bh_cut(p_counts, m, sig.alpha)
         edges = significance.assemble_edges(
             pv_map, rho, drho_map, trend_map, p_cut
         )
-        if pv_w is not None:
-            store.save_meta(
-                pv_w.dir, pv_map.shape, pv_map.dtype,
-                {**meta_common, "alpha": sig.alpha,
-                 "p_threshold": p_threshold, "n_tests": n_tests},
-            )
-            edir = pv_w.dir.parent / "edges"
-            edir.mkdir(parents=True, exist_ok=True)
-            np.save(edir / "data.npy", edges)
-            store.save_meta(
-                edir, edges.shape, edges.dtype.str,
-                {**meta_common, "alpha": sig.alpha,
-                 "p_threshold": p_threshold, "n_tests": n_tests,
-                 "n_edges": int(edges.shape[0]),
-                 "fields": list(edges.dtype.names)},
-            )
+        sig_meta = {**meta_common, "alpha": sig.alpha,
+                    "p_threshold": p_threshold, "n_tests": n_tests}
+        store.save_meta(pv_w.dir, pv_map.shape, pv_map.dtype, sig_meta)
+        edir = pv_w.dir.parent / "edges"
+        edir.mkdir(parents=True, exist_ok=True)
+        store.atomic_save_npy(edir / "data.npy", edges)
+        store.save_meta(
+            edir, edges.shape, edges.dtype.str,
+            {**sig_meta, "n_edges": int(edges.shape[0]),
+             "fields": list(edges.dtype.names)},
+        )
         if progress:
             print(
                 f"BH-FDR alpha={sig.alpha}: p* = {p_threshold:.4g} over "
-                f"{n_tests} tests -> {0 if edges is None else len(edges)} edges"
+                f"{n_tests} tests -> {len(edges)} edges"
             )
 
     return SignificanceResult(
         drho=drho_map, trend=trend_map, pvals=pv_map, edges=edges,
         p_threshold=p_threshold, n_tests=n_tests,
+    )
+
+
+def finalize_significance(
+    out_dir: str,
+    rho: np.ndarray,
+    cfg: EDMConfig,
+    sig: SignificanceConfig,
+    progress: bool = False,
+) -> SignificanceResult:
+    """The fleet's ``finalize`` work unit (DESIGN.md SS10): assemble the
+    (multi-writer) significance store, recount the p-value histogram,
+    and write the BH-FDR edge list — by whichever worker claims the
+    unit, none of whose own chunks need be among the blocks.  Idempotent
+    (a finalizer crash just reruns it); raises if any artifact's
+    coverage is still incomplete."""
+    N = rho.shape[0]
+    do_conv = bool(sig.lib_sizes)
+    do_null = sig.n_surrogates > 0
+    conv_w = TileWriter(f"{out_dir}/rho_conv", N) if do_conv else None
+    trend_w = TileWriter(f"{out_dir}/rho_trend", N) if do_conv else None
+    pv_w = TileWriter(f"{out_dir}/pvals", N) if do_null else None
+    for w in (conv_w, trend_w, pv_w):
+        if w is not None and not w.covered().all():
+            raise ValueError(
+                f"{w.dir} is incomplete ({int((~w.covered()).sum())} rows "
+                "uncovered): finalize ran before every sig unit was done"
+            )
+    return _finalize_store(
+        cfg, sig, rho, conv_w=conv_w, trend_w=trend_w, pv_w=pv_w,
+        p_counts=None, progress=progress,
     )
 
 

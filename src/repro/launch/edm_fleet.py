@@ -1,0 +1,380 @@
+"""Masterless multi-process EDM fleet — the paper's 512-node master-worker
+over the tile store, without the master (DESIGN.md SS10).
+
+  # spawned for you:
+  PYTHONPATH=src python -m repro.launch.edm_run --synthetic 64x500 \
+      --workers 4 --surrogates 20 --out /tmp/fleet
+  # or by hand / on other hosts sharing the filesystem:
+  PYTHONPATH=src python -m repro.launch.edm_fleet --out /tmp/fleet \
+      --worker-id w2
+
+Every worker runs the SAME stage sequence and coordinates purely through
+files in the shared ``--out`` store (works for local processes and for
+hosts sharing a parallel filesystem alike):
+
+  phase1   — one unit; the claimer runs simplex projection for all rows
+             and persists optE + simplex rhos (the run's one broadcast).
+  phase2   — (row-span) units claimed from a lease queue; each worker
+             computes its units under its OWN local mesh with the
+             existing chunk functions and streams tiles through a
+             writer_id-sharded TileWriter.
+  assemble — one unit: merge manifests, memmap-assemble causal_map/.
+  sig      — (row-span) units of the significance stage: prefix-kNN
+             convergence sweeps + surrogate-null batches per claimed
+             chunk, through the same sharded writers.
+  finalize — one unit: assemble rho_conv/rho_trend/pvals, recount the
+             p histogram, BH-FDR edge list.
+
+Elasticity: SIGKILL any worker at any point; its unclaimed units are
+untouched, its claimed unit's lease expires (or is reclaimed instantly
+by a relaunched worker with the same id) and is recomputed.  Because
+every unit's values are geometry-independent and every store write is
+an atomic replace of bit-identical content, the assembled causal_map,
+rho_conv, and pvals arrays are byte-identical for ANY worker count,
+kill schedule, or unit size — W=4 with a mid-run kill equals a fresh
+W=1 run (asserted in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.core import ccm
+from repro.core.types import EDMConfig
+from repro.data import store
+from repro.data.store import TileWriter
+from repro.inference import SignificanceConfig
+from repro.runtime.workqueue import LeaseQueue, WorkUnit, plan_units
+
+SPEC_NAME = "fleet.json"
+
+
+# ------------------------------------------------------------------- spec
+def init_fleet(
+    out_dir: str | pathlib.Path,
+    dataset: str | pathlib.Path,
+    cfg: EDMConfig,
+    sig: SignificanceConfig | None = None,
+    unit_rows: int = 0,
+    seed: int | None = None,
+) -> dict:
+    """Write the shared fleet spec every worker derives its queue from.
+
+    unit_rows=0 resolves to one local-mesh chunk (devices x lib_block) —
+    the natural claim granularity.  The spec pins dataset path, configs,
+    and the unit grid so W workers agree on the queue with no exchange.
+    """
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    meta = json.loads((pathlib.Path(dataset) / "meta.json").read_text())
+    N, L = (int(s) for s in meta["shape"][:2])
+    if unit_rows <= 0:
+        import jax
+
+        unit_rows = len(jax.devices()) * cfg.lib_block
+    if seed is None:
+        seed = 0 if sig is None else sig.seed
+    spec = {
+        "dataset": str(pathlib.Path(dataset).resolve()),
+        "N": N,
+        "L": L,  # pins dataset identity: same-N, different-L swaps refuse
+        "unit_rows": int(unit_rows),
+        "seed": int(seed),
+        "cfg": dataclasses.asdict(cfg),
+        "sig": None if sig is None else dataclasses.asdict(sig),
+    }
+    # JSON round-trip so the resume equality check compares like with
+    # like (tuples become lists exactly as they will when read back).
+    spec = json.loads(json.dumps(spec))
+    existing = out / SPEC_NAME
+    if existing.exists():
+        have = json.loads(existing.read_text())
+        if have != spec:
+            raise ValueError(
+                f"fleet spec mismatch in {out}: store was initialised with "
+                f"{have} but this run asks for {spec}; use a fresh --out dir"
+            )
+        return have
+    store.atomic_write_text(existing, json.dumps(spec, indent=1))
+    return spec
+
+
+def load_fleet(out_dir: str | pathlib.Path) -> dict:
+    spec = json.loads((pathlib.Path(out_dir) / SPEC_NAME).read_text())
+    spec["cfg"] = EDMConfig(**spec["cfg"])
+    if spec["sig"] is not None:
+        s = dict(spec["sig"])
+        s["lib_sizes"] = tuple(s["lib_sizes"])
+        spec["sig"] = SignificanceConfig(**s)
+    return spec
+
+
+def spawn_worker(
+    out_dir: str | pathlib.Path,
+    worker_id: str,
+    ttl: float | None = None,
+    env: dict | None = None,
+) -> subprocess.Popen:
+    """Spawn one fleet worker as a detached subprocess.
+
+    Workers share a JAX persistent compilation cache under the store
+    (unless the caller already exported one): W processes compile the
+    same jit signatures, so all but the first hit the disk cache —
+    the fleet's answer to the paper's GPU-init straggler tail (SSIV-B2).
+    """
+    e = dict(os.environ if env is None else env)
+    e.setdefault("JAX_COMPILATION_CACHE_DIR",
+                 str(pathlib.Path(out_dir).resolve() / "jax_cache"))
+    e.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+    src = pathlib.Path(__file__).resolve().parents[2]
+    e["PYTHONPATH"] = f"{src}:{e['PYTHONPATH']}" if e.get("PYTHONPATH") else str(src)
+    cmd = [sys.executable, "-m", "repro.launch.edm_fleet",
+           "--out", str(out_dir), "--worker-id", worker_id]
+    if ttl is not None:
+        cmd += ["--ttl", str(ttl)]
+    return subprocess.Popen(cmd, env=e)
+
+
+# ----------------------------------------------------------------- worker
+def _sub_chunks(unit: WorkUnit, chunk: int) -> list[tuple[int, int]]:
+    """Split a claimed unit into local-mesh-sized (row0, valid) chunks
+    (a unit from a spec written under a different device count may span
+    several of this worker's chunks — elastic across mesh sizes)."""
+    hi = unit.row0 + unit.nrows
+    return [(r, min(chunk, hi - r)) for r in range(unit.row0, hi, chunk)]
+
+
+def _covered_and(writers: list[TileWriter]) -> np.ndarray:
+    cov = writers[0].refresh().covered()
+    for w in writers[1:]:
+        cov &= w.refresh().covered()
+    return cov
+
+
+class FleetWorker:
+    """One worker's walk through the stage sequence.  Usable in-process
+    (tests drive several workers' stages by hand) or via main()."""
+
+    def __init__(self, out_dir: str | pathlib.Path, worker_id: str,
+                 ttl: float = 600.0, poll: float = 0.25,
+                 timeout: float | None = 3600.0, progress: bool = True):
+        self.out = pathlib.Path(out_dir)
+        spec = load_fleet(self.out)
+        self.cfg: EDMConfig = spec["cfg"]
+        self.sig: SignificanceConfig | None = spec["sig"]
+        self.unit_rows: int = spec["unit_rows"]
+        self.seed: int = spec.get("seed", 0)
+        self.ts = np.asarray(store.load_dataset(spec["dataset"]), np.float32)
+        self.N = self.ts.shape[0]
+        want = (spec["N"], spec.get("L", self.ts.shape[1]))
+        if self.ts.shape != want:
+            raise ValueError(
+                f"dataset shape {self.ts.shape} != fleet spec {want}"
+            )
+        self.worker_id = worker_id
+        self.queue = LeaseQueue(self.out / "queue", worker_id, ttl=ttl,
+                                poll=poll)
+        self.timeout = timeout
+        self.progress = progress
+        from repro.core.pipeline import default_mesh
+
+        self.mesh = default_mesh()
+        self.chunk = self.mesh.size * self.cfg.lib_block
+
+    def _log(self, msg: str) -> None:
+        if self.progress:
+            print(f"[{self.worker_id}] {msg}", flush=True)
+
+    # -------------------------------------------------------- stage fns
+    def _phase1(self) -> np.ndarray:
+        from repro.core.pipeline import run_phase1
+
+        p1 = self.out / "phase1"
+
+        def compute(unit):
+            self._log("phase1: simplex projection")
+            rhos, optE = run_phase1(
+                self.ts, self.cfg, self.mesh,
+                on_chunk=lambda row0: self.queue.renew(unit),
+            )
+            p1.mkdir(parents=True, exist_ok=True)
+            # optE.npy is the stage's completion WITNESS (already_done
+            # below + pollers), so it must land LAST: a kill between
+            # these writes then leaves an unwitnessed stage that gets
+            # recomputed, never a witnessed stage missing artifacts.
+            store.atomic_save_npy(p1 / "simplex_rho.npy", rhos)
+            store.save_meta(p1, optE.shape, optE.dtype, {"stat": "optE"})
+            store.atomic_save_npy(p1 / "optE.npy", optE)
+
+        self.queue.run_stage(
+            plan_units("phase1", self.N, self.unit_rows), compute,
+            already_done=lambda u: (p1 / "optE.npy").exists(),
+            timeout=self.timeout,
+        )
+        return np.load(p1 / "optE.npy")
+
+    def _phase2(self, optE: np.ndarray) -> None:
+        import jax.numpy as jnp
+
+        from repro.core.pipeline import run_phase2_chunks
+
+        ts_fut = np.asarray(ccm.all_futures(jnp.asarray(self.ts), self.cfg))
+        writer = TileWriter(self.out, self.N, writer_id=self.worker_id)
+        units = plan_units("phase2", self.N, self.unit_rows)
+
+        def compute(unit):
+            self._log(f"phase2 rows {unit.row0}..{unit.row0 + unit.nrows}")
+            # One call per sub-chunk so multi-chunk units (elastic
+            # unit_rows from a bigger mesh) renew their lease between
+            # chunks instead of silently outliving the TTL.
+            for sub in _sub_chunks(unit, self.chunk):
+                self.queue.renew(unit)
+                run_phase2_chunks(
+                    self.ts, ts_fut, optE, self.cfg, self.mesh, [sub],
+                    writer=writer,
+                )
+
+        # Coverage snapshot ONCE per stage entry (refresh + covered walk
+        # every manifest shard — O(tiles), not something to redo per
+        # unit); units finished later are handled by the queue itself.
+        cov = writer.refresh().covered()
+        already_done = lambda u: bool(cov[u.row0 : u.row0 + u.nrows].all())
+        self.queue.run_stage(units, compute, already_done=already_done,
+                             timeout=self.timeout)
+
+    def _assemble(self, optE: np.ndarray) -> np.ndarray:
+        map_npy = self.out / "causal_map" / "data.npy"
+
+        def compute(unit):
+            self._log("assemble: causal_map")
+            writer = TileWriter(self.out, self.N)
+            if not writer.covered().all():
+                # Queue markers say phase 2 is done but the store is not
+                # covered — someone removed tiles or the fs lost data.
+                # Fail loudly rather than assemble silent zero rows
+                # (delete <out>/queue/ to force a recompute-from-coverage).
+                raise RuntimeError(
+                    f"phase-2 store {self.out} incomplete at assemble: "
+                    f"{int((~writer.covered()).sum())} rows uncovered"
+                )
+            rho = writer.assemble(mmap_path=map_npy)
+            n_buckets = len(np.unique(optE))
+            store.save_meta(
+                self.out / "causal_map", rho.shape, rho.dtype,
+                {
+                    "optE": optE.tolist(),
+                    "engine": self.cfg.engine,
+                    "bucketed": self.cfg.bucketed,
+                    "n_buckets": int(n_buckets),
+                    "stream_depth": self.cfg.stream_depth,
+                    "target_tile": self.cfg.target_tile,
+                    "knn_tile_c": self.cfg.knn_tile_c,
+                    "seed": self.seed,
+                    "fleet": True,
+                },
+            )
+
+        self.queue.run_stage(
+            plan_units("assemble", self.N, self.unit_rows), compute,
+            timeout=self.timeout,
+        )
+        return np.load(map_npy, mmap_mode="r")
+
+    def _significance(self, optE: np.ndarray, rho: np.ndarray) -> None:
+        from repro.inference.pipeline import (
+            SignificanceChunkRunner,
+            _check_resume_config,
+            _writer,
+            finalize_significance,
+            make_store_drain,
+        )
+
+        sig = self.sig
+        _check_resume_config(self.out, sig)
+        runner = SignificanceChunkRunner(
+            self.ts, optE, self.cfg, sig, self.mesh
+        )
+        conv_w = trend_w = pv_w = None
+        if runner.do_conv:
+            conv_w = _writer(self.out, "rho_conv", self.N, runner.order,
+                             writer_id=self.worker_id)
+            trend_w = _writer(self.out, "rho_trend", self.N, runner.order,
+                              writer_id=self.worker_id)
+        if runner.do_null:
+            pv_w = _writer(self.out, "pvals", self.N, runner.order,
+                           writer_id=self.worker_id)
+        writers = [w for w in (conv_w, trend_w, pv_w) if w is not None]
+        drain = make_store_drain(self.N, conv_w, trend_w, pv_w)
+
+        def compute(unit):
+            self._log(f"sig rows {unit.row0}..{unit.row0 + unit.nrows}")
+            renew = lambda row0: self.queue.renew(unit)
+            runner.run(_sub_chunks(unit, self.chunk), rho, drain,
+                       on_chunk=renew)
+            for w in writers:
+                w.commit()
+
+        # AND-of-coverages snapshot once per stage entry (SS9 resume
+        # semantics: a chunk counts only when EVERY artifact has it).
+        cov = _covered_and(writers)
+        already_done = lambda u: bool(cov[u.row0 : u.row0 + u.nrows].all())
+        self.queue.run_stage(
+            plan_units("sig", self.N, self.unit_rows), compute,
+            already_done=already_done, timeout=self.timeout,
+        )
+
+        def do_finalize(unit):
+            self._log("finalize: assembly + recount + BH-FDR edges")
+            out = finalize_significance(
+                str(self.out), rho, self.cfg, sig, progress=self.progress
+            )
+            del out
+
+        self.queue.run_stage(
+            plan_units("finalize", self.N, self.unit_rows), do_finalize,
+            timeout=self.timeout,
+        )
+
+    # --------------------------------------------------------- full run
+    def run(self) -> None:
+        t0 = time.time()
+        optE = self._phase1()
+        self._phase2(optE)
+        rho = self._assemble(optE)
+        if self.sig is not None and (
+            self.sig.lib_sizes or self.sig.n_surrogates > 0
+        ):
+            self._significance(optE, rho)
+        self._log(f"done in {time.time() - t0:.1f}s")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", required=True,
+                    help="shared fleet store (must hold fleet.json; see "
+                    "edm_run --workers or init_fleet)")
+    ap.add_argument("--worker-id", required=True,
+                    help="stable queue identity; relaunching a killed "
+                    "worker under the SAME id reclaims its leases instantly")
+    ap.add_argument("--ttl", type=float, default=600.0,
+                    help="lease expiry seconds (crashed foreign workers' "
+                    "units become claimable after this)")
+    ap.add_argument("--poll", type=float, default=0.25,
+                    help="barrier poll interval seconds")
+    ap.add_argument("--timeout", type=float, default=3600.0,
+                    help="max seconds to wait on any one stage barrier")
+    args = ap.parse_args(argv)
+    FleetWorker(args.out, args.worker_id, ttl=args.ttl, poll=args.poll,
+                timeout=args.timeout).run()
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,12 @@
   PYTHONPATH=src python -m repro.launch.edm_run --synthetic 64x600 \
       --lib-sizes 100,200,400 --surrogates 20 --fdr 0.05 --seed 0 --out ...
 
+  # multi-process elastic fleet (DESIGN.md SS10): W masterless workers
+  # claim (row-span) work units from a lease queue over the store;
+  # output is bit-identical to --workers 0 (the in-process path)
+  PYTHONPATH=src python -m repro.launch.edm_run --synthetic 64x500 \
+      --surrogates 20 --workers 4 --out /tmp/fleet
+
 Reads a zarr-lite dataset (data/store.py), runs distributed simplex
 projection + CCM on all local devices (the production launch wraps the
 same entry point under the pod mesh), streams (row-chunk x col-tile)
@@ -42,6 +48,92 @@ from repro.data import store
 from repro.data.synthetic import dummy_brain
 from repro.engine import available_engines
 from repro.inference import SignificanceConfig, run_significance
+
+
+def _run_fleet(args, ts, cfg, sig):
+    """--workers N: self-spawn a local masterless fleet (DESIGN.md SS10).
+
+    The driver only prepares the shared store (dataset + fleet.json) and
+    spawns/waits on worker processes — it schedules nothing; workers
+    claim work units from the lease queue themselves.  A worker that
+    dies is NOT fatal: the survivors reclaim its units after lease
+    expiry, so the run completes as long as one worker lives (the
+    driver re-raises only if ALL workers failed or artifacts are
+    missing).
+    """
+    import json
+    import pathlib
+
+    from repro.launch import edm_fleet
+
+    out = pathlib.Path(args.out)
+    dataset = args.dataset
+    if args.synthetic:
+        dataset = out / "dataset"
+        meta_f = dataset / "meta.json"
+        if meta_f.exists():
+            # Resume: the stored dataset must BE the requested one — a
+            # changed spec silently reusing old data (same N, different
+            # L or seed semantics) would compute over the wrong series.
+            have = json.loads(meta_f.read_text()).get("synthetic")
+            if have != args.synthetic:
+                raise SystemExit(
+                    f"--out {out} holds a --synthetic {have} dataset but "
+                    f"this run asks for {args.synthetic}; use a fresh "
+                    "--out dir"
+                )
+        else:
+            store.save_dataset(dataset, ts, {"synthetic": args.synthetic})
+    edm_fleet.init_fleet(
+        out, dataset, cfg, sig, unit_rows=args.unit_rows, seed=args.seed
+    )
+    t0 = time.time()
+    procs = {
+        f"w{i}": edm_fleet.spawn_worker(out, f"w{i}")
+        for i in range(args.workers)
+    }
+    fails = []
+    for wid, p in procs.items():
+        if p.wait() != 0:
+            fails.append(wid)
+    if fails:
+        print(f"warning: worker(s) {fails} exited nonzero "
+              "(surviving workers cover their units)")
+    # Success = the queue's durable stage witnesses exist (done markers
+    # are written strictly AFTER the store commit they certify — a mere
+    # data.npy can be a torn open_memmap of a fleet that died
+    # mid-assemble) AND every artifact this run was asked for is present.
+    required = [out / "queue" / "assemble.done",
+                out / "causal_map" / "data.npy",
+                out / "causal_map" / "meta.json"]
+    if sig is not None:
+        required.append(out / "queue" / "finalize.done")
+        if sig.lib_sizes:
+            required += [out / "rho_conv" / "data.npy",
+                         out / "rho_trend" / "data.npy"]
+        if sig.n_surrogates:
+            required += [out / "pvals" / "data.npy",
+                         out / "edges" / "data.npy"]
+    missing = [str(p) for p in required if not p.exists()]
+    if missing:
+        raise SystemExit(
+            f"fleet failed: missing completion witness(es) {missing} "
+            f"(worker failures: {fails or 'none reported'})"
+        )
+    meta = json.loads((out / "causal_map" / "meta.json").read_text())
+    N = meta["shape"][0]
+    dt = time.time() - t0
+    print(f"fleet[{args.workers}] causal map {N}x{N} in {dt:.1f}s "
+          f"({N * N / dt:.0f} cross-maps/s); engine {cfg.engine}; "
+          f"buckets {meta['n_buckets']}/{cfg.E_max}; "
+          f"tile {cfg.target_tile or N}")
+    if sig is not None:
+        emeta = json.loads((out / "edges" / "meta.json").read_text()) \
+            if (out / "edges" / "meta.json").exists() else None
+        if emeta is not None:
+            print(f"significance: {emeta['n_edges']} edges at FDR "
+                  f"{emeta['alpha']} (p* = {emeta['p_threshold']:.4g}, "
+                  f"{emeta['n_tests']} tests)")
 
 
 def main():
@@ -108,6 +200,18 @@ def main():
         "derived from it drives the convergence subsampling permutation "
         "and every surrogate draw (recorded in meta.json)",
     )
+    ap.add_argument(
+        "--workers", type=int, default=0,
+        help="self-spawn a local fleet of this many masterless worker "
+        "processes over the output store (DESIGN.md SS10); 0 = run "
+        "in-process.  Any W produces bit-identical causal_map/rho_conv/"
+        "pvals arrays; workers share a JAX compilation cache under --out",
+    )
+    ap.add_argument(
+        "--unit-rows", type=int, default=0,
+        help="fleet work-unit height in rows (claim granularity); "
+        "0 = one worker chunk (devices x lib-block)",
+    )
     args = ap.parse_args()
 
     if args.synthetic:
@@ -129,6 +233,18 @@ def main():
         stream_depth=args.stream_depth, target_tile=args.target_tile,
         knn_tile_c=args.knn_tile,
     )
+    # ONE sig construction for both drivers — the fleet path must run
+    # exactly the config the in-process path would (bit-identity).
+    lib_sizes = tuple(int(s) for s in args.lib_sizes.split(",") if s)
+    sig = None
+    if lib_sizes or args.surrogates:
+        sig = SignificanceConfig(
+            lib_sizes=lib_sizes, n_surrogates=args.surrogates,
+            alpha=args.fdr, surrogate=args.surrogate_kind, seed=args.seed,
+        )
+    if args.workers > 0:
+        _run_fleet(args, ts, cfg, sig)
+        return
     t0 = time.time()
     result = run_causal_inference(ts, cfg, out_dir=args.out, progress=True)
     dt = time.time() - t0
@@ -155,19 +271,14 @@ def main():
         args.out + "/causal_map", result.rho.shape, result.rho.dtype, meta
     )
 
-    lib_sizes = tuple(int(s) for s in args.lib_sizes.split(",") if s)
-    if lib_sizes or args.surrogates:
-        sig = SignificanceConfig(
-            lib_sizes=lib_sizes, n_surrogates=args.surrogates,
-            alpha=args.fdr, surrogate=args.surrogate_kind, seed=args.seed,
-        )
+    if sig is not None:
         t1 = time.time()
         out = run_significance(
             ts, np.asarray(result.optE), np.asarray(result.rho), cfg, sig,
             out_dir=args.out, progress=True,
         )
-        stages = [s for s, on in (("convergence", lib_sizes),
-                                  ("surrogates", args.surrogates)) if on]
+        stages = [s for s, on in (("convergence", sig.lib_sizes),
+                                  ("surrogates", sig.n_surrogates)) if on]
         print(f"significance [{'+'.join(stages)}] in {time.time() - t1:.1f}s"
               + (f"; {len(out.edges)} edges at FDR {args.fdr} "
                  f"(p* = {out.p_threshold:.4g}, {out.n_tests} tests)"

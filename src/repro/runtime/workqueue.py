@@ -1,0 +1,297 @@
+"""Elastic file-lock lease work queue — the paper's master-worker, masterless.
+
+The paper schedules EDM work units from an MPI master onto 512 workers
+(SSIII-C).  Our substrate is better than a master: the TileWriter store
+already makes every (row-chunk x col-tile) block idempotent and
+resumable, so scheduling reduces to *mutual exclusion with expiry* over
+a deterministic unit list that every worker can compute on its own.
+This module provides exactly that:
+
+  * :class:`WorkUnit` — a (kind, row0, nrows) row span of one pipeline
+    stage ("phase1", "phase2", "assemble", "sig", "finalize").  Unit
+    lists derive deterministically from (N, unit_rows), so W workers
+    pointed at the same store agree on the queue without any exchange.
+  * :class:`LeaseQueue` — claim/renew/steal/done over lease files in a
+    shared directory.  A claim is an O_CREAT|O_EXCL lease create (atomic
+    on POSIX local *and* network filesystems); a crash leaves the lease
+    to EXPIRE (wall-clock TTL), after which any worker may steal it by
+    token-stamped atomic replace.  Completion is a separate durable done
+    marker, written only after the store commit it certifies.
+
+Safety model: leases make duplicate work *rare*, not impossible (two
+stealers can race the replace; the loser's readback detects it, but a
+worker may also outlive its own TTL mid-compute).  Correctness never
+depends on exclusion: every unit's outputs are bit-identical regardless
+of which worker computes them (geometry-independent values, DESIGN.md
+SS7/SS9/SS10) and every store write is an atomic replace, so duplicated
+units overwrite each other with identical bytes.  The queue is pure
+coordination; the store is the ground truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+
+# The ONE durability primitive (write-temp + fsync + os.replace) is
+# owned by the store — queue files and store files share the same
+# "SIGKILL can never tear shared state" contract, so they must share
+# the same implementation.
+from repro.data.store import _unique_tmp, atomic_write_text
+
+_STAGELESS = ("phase1", "assemble", "finalize")  # one unit per run
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class WorkUnit:
+    """One claimable span of pipeline work.
+
+    kind: stage name; "phase2" and "sig" units carry a [row0, row0+nrows)
+    row span of the causal map, the singleton kinds ("phase1",
+    "assemble", "finalize") span the whole run and exist once.
+    """
+
+    kind: str
+    row0: int = 0
+    nrows: int = 0
+
+    @property
+    def uid(self) -> str:
+        if self.kind in _STAGELESS:
+            return self.kind
+        return f"{self.kind}_{self.row0:08d}_{self.nrows:05d}"
+
+
+def plan_units(kind: str, N: int, unit_rows: int) -> list["WorkUnit"]:
+    """Deterministic unit grid for a row-span stage: every worker calls
+    this with the same (N, unit_rows) from the fleet spec and gets the
+    same queue — no master required."""
+    if kind in _STAGELESS:
+        return [WorkUnit(kind, 0, N)]
+    if unit_rows < 1:
+        raise ValueError(f"unit_rows={unit_rows} must be >= 1")
+    return [
+        WorkUnit(kind, r, min(unit_rows, N - r)) for r in range(0, N, unit_rows)
+    ]
+
+
+class LeaseQueue:
+    """File-lock lease queue over a shared directory.
+
+    Per unit uid there are two files: ``<uid>.lease`` (current claim:
+    worker, pid, token, t, ttl) and ``<uid>.done`` (durable completion
+    marker).  The protocol:
+
+      claim    — O_CREAT|O_EXCL create of the lease.  If it exists and is
+                 expired (t + ttl < now), or belongs to THIS worker id (a
+                 relaunch after SIGKILL reclaims its own units without
+                 waiting out the TTL), steal: atomically replace with a
+                 fresh token and read back — owning the readback token is
+                 owning the lease.
+      renew    — re-stamp t on an owned lease mid-compute (long units).
+      mark_done— create the done marker (after the store commit), then
+                 drop the lease.
+      run_stage— the masterless barrier: loop {claim, compute, done}
+                 until every unit of the stage is done, sleeping between
+                 polls while other workers hold the remainder.
+    """
+
+    def __init__(
+        self,
+        root: str | pathlib.Path,
+        worker: str,
+        ttl: float = 600.0,
+        poll: float = 0.25,
+    ):
+        if ttl <= 0:
+            raise ValueError("ttl must be > 0")
+        self.dir = pathlib.Path(root)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.worker = worker
+        self.ttl = float(ttl)
+        self.poll = float(poll)
+        self._n = 0  # per-claim token counter
+
+    # ------------------------------------------------------------ paths
+    def _lease(self, unit: WorkUnit) -> pathlib.Path:
+        return self.dir / f"{unit.uid}.lease"
+
+    def _done(self, unit: WorkUnit) -> pathlib.Path:
+        return self.dir / f"{unit.uid}.done"
+
+    def _payload(self) -> dict:
+        self._n += 1
+        return {
+            "worker": self.worker,
+            "pid": os.getpid(),
+            "token": f"{self.worker}-{os.getpid()}-{self._n}-{os.urandom(4).hex()}",
+            "t": time.time(),
+            "ttl": self.ttl,
+        }
+
+    @staticmethod
+    def _read(path: pathlib.Path) -> dict | None:
+        try:
+            return json.loads(path.read_text())
+        except (OSError, ValueError):
+            return None  # missing, or torn by a non-atomic foreign writer
+
+    # ----------------------------------------------------------- claims
+    def is_done(self, unit: WorkUnit) -> bool:
+        return self._done(unit).exists()
+
+    def pending(self, units: list[WorkUnit]) -> list[WorkUnit]:
+        return [u for u in units if not self.is_done(u)]
+
+    def try_claim(self, unit: WorkUnit) -> bool:
+        """True when this worker now holds the unit's lease."""
+        if self.is_done(unit):
+            return False
+        path = self._lease(unit)
+        payload = self._payload()
+        # Atomic create-with-content: hard-link a fully-written temp onto
+        # the lease name.  O_CREAT|O_EXCL alone is NOT enough — it makes
+        # the (empty) file visible before the payload lands, and a
+        # concurrent reader would mistake the moment for a torn lease.
+        tmp = _unique_tmp(path)
+        with open(tmp, "w") as f:
+            f.write(json.dumps(payload))
+            f.flush()
+            os.fsync(f.fileno())
+        try:
+            os.link(tmp, path)
+            # mark_done writes the done marker BEFORE unlinking the lease,
+            # so if our link landed on a name a finisher just freed, the
+            # marker is already visible — recheck and back off.
+            return self._acquired(unit)
+        except FileExistsError:
+            pass
+        finally:
+            os.unlink(tmp)
+        held = self._read(path)
+        now = time.time()
+        if held is None:
+            # Unreadable: torn by a foreign non-atomic writer, or unlinked
+            # between our exists-check and read.  Grace it by file mtime —
+            # never steal something that might be mid-protocol and fresh.
+            try:
+                expired = os.path.getmtime(path) + self.ttl < now
+            except OSError:
+                expired = True  # vanished: the holder finished or released
+            own_ghost = False
+        else:
+            expired = held.get("t", 0) + held.get("ttl", 0) < now
+            # A lease this worker id wrote in a PREVIOUS life (it was
+            # killed and relaunched) is immediately reclaimable — the id
+            # names the queue slot, and a live worker never claims the
+            # same unit twice.
+            own_ghost = held.get("worker") == self.worker
+        if not (expired or own_ghost):
+            return False
+        if self.is_done(unit):  # the holder finished while we deliberated
+            return False
+        # Steal by token-stamped replace; the readback arbitrates racing
+        # stealers (at most one sees its own token as the survivor).
+        atomic_write_text(path, json.dumps(payload))
+        back = self._read(path)
+        if back is None or back.get("token") != payload["token"]:
+            return False
+        return self._acquired(unit)
+
+    def _acquired(self, unit: WorkUnit) -> bool:
+        """Post-acquisition done recheck: a finisher may have completed
+        the unit in the window between our pre-checks and the lease
+        landing.  Dropping the just-taken lease keeps done units
+        lease-free (claim order: done marker always wins)."""
+        if not self.is_done(unit):
+            return True
+        try:
+            self._lease(unit).unlink()
+        except OSError:
+            pass
+        return False
+
+    def claim_next(self, units: list[WorkUnit]) -> WorkUnit | None:
+        for u in units:
+            if self.try_claim(u):
+                return u
+        return None
+
+    def renew(self, unit: WorkUnit) -> bool:
+        """Re-stamp an owned lease's clock; False if no longer the owner
+        (the unit was stolen after this worker outlived its TTL — finish
+        anyway: duplicate completion is safe, see module docstring)."""
+        held = self._read(self._lease(unit))
+        if held is None or held.get("worker") != self.worker:
+            return False
+        held["t"] = time.time()
+        atomic_write_text(self._lease(unit), json.dumps(held))
+        return True
+
+    def release(self, unit: WorkUnit) -> None:
+        """Give a claimed-but-uncomputed unit back (graceful shutdown)."""
+        held = self._read(self._lease(unit))
+        if held is not None and held.get("worker") == self.worker:
+            try:
+                self._lease(unit).unlink()
+            except OSError:
+                pass
+
+    def mark_done(self, unit: WorkUnit) -> None:
+        """Durable completion marker.  Call ONLY after the store writes
+        the unit certifies are committed (the marker is what lets other
+        workers skip the unit forever)."""
+        atomic_write_text(
+            self._done(unit),
+            json.dumps({"worker": self.worker, "t": time.time()}),
+        )
+        try:
+            self._lease(unit).unlink()
+        except OSError:
+            pass
+
+    # ---------------------------------------------------------- barrier
+    def run_stage(
+        self,
+        units: list[WorkUnit],
+        compute,
+        already_done=None,
+        timeout: float | None = None,
+    ) -> int:
+        """Masterless stage barrier: claim and compute units until EVERY
+        unit is done (by this worker or any other), then return how many
+        this worker computed.
+
+        already_done(unit) -> bool lets the caller skip units whose
+        output is durable in the store from a prior run (elastic resume:
+        queue markers and store coverage may disagree after a crash —
+        the store wins).  While other workers hold the remaining units
+        this worker sleeps ``poll`` between scans; a holder that dies
+        mid-unit surfaces back as claimable once its lease expires, so
+        the barrier cannot deadlock on a crash.  ``timeout`` (seconds)
+        bounds the total wait and raises TimeoutError — a fleet-wide
+        wedge is a bug, not a state to park in forever.
+        """
+        t0 = time.monotonic()
+        computed = 0
+        if already_done is not None:
+            for u in units:
+                if not self.is_done(u) and already_done(u):
+                    self.mark_done(u)
+        while True:
+            unit = self.claim_next(units)
+            if unit is not None:
+                compute(unit)
+                self.mark_done(unit)
+                computed += 1
+                continue
+            if not self.pending(units):
+                return computed
+            if timeout is not None and time.monotonic() - t0 > timeout:
+                raise TimeoutError(
+                    f"stage {units[0].kind}: {len(self.pending(units))} "
+                    f"unit(s) still pending after {timeout:.0f}s"
+                )
+            time.sleep(self.poll)
