@@ -58,7 +58,7 @@ class ModelConfig:
     # distribution) instead of (B, S, V) — SSPerf hillclimb knob
     prefill_last_only: bool = False
     # sequence-parallel attention: shard the query-sequence dim over the
-    # model axis inside attention (16x less attention compute/slab per chip
+    # model axis inside attention (16x less attention compute/memory per chip
     # for archs whose head count does not divide the axis) — SSPerf knob
     attn_seq_shard: bool = False
 

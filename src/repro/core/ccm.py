@@ -29,14 +29,13 @@ bit-identical causal maps.
 
 All device compute routes through the execution engine named by
 cfg.engine (repro.engine; DESIGN.md SS5).  Table construction inside the
-engines additionally routes between the (Lq, Lc) distance-SLAB and the
-candidate-tiled STREAMING selection (cfg.knn_tile_c, DESIGN.md SS8) —
-bit-identical tables under the cumulative knn_impl variants (the
-default), so every CCM path here is oblivious to the choice;
-at paper-scale library lengths the streaming route is what keeps per-
-device table construction inside the VMEM/HBM budget.  For libraries
-too long for one device, pipeline.knn_tables_library_sharded shards the
-CANDIDATE axis and reduces per-shard tables host-side.
+engines is candidate-tiled STREAMING selection (cfg.knn_tile_c = forced
+or auto-calibrated tile width, DESIGN.md SS8) — every tile width yields
+bit-identical tables, so every CCM path here is oblivious to the choice;
+the flat-in-Lc working set is what keeps per-device table construction
+inside the VMEM/HBM budget at paper-scale library lengths.  For
+libraries too long for one device, pipeline.knn_tables_library_sharded
+shards the CANDIDATE axis and reduces per-shard tables host-side.
 """
 from __future__ import annotations
 
@@ -127,8 +126,9 @@ def ccm_row_tables(x: jax.Array, cfg: EDMConfig) -> tuple[jax.Array, jax.Array]:
 
     x: (L,).  Returns (idx, w), each (E_max, Lp, k_max).  Tables depend
     only on the library series, so callers reuse them across every target
-    tile of a chunk (DESIGN.md SS7).  The engine picks slab vs streaming
-    selection per cfg.knn_tile_c (DESIGN.md SS8) — identical tables.
+    tile of a chunk (DESIGN.md SS7).  The engine streams candidate tiles
+    of the width resolved from cfg.knn_tile_c (DESIGN.md SS8) —
+    identical tables at any width.
     """
     eng = engines.get_engine(cfg.engine)
     Lp = cfg.n_points(x.shape[0])

@@ -13,16 +13,20 @@ where V = lag_matrix(x).  mpEDM recomputes each D_E from scratch
 (O(Lq*Lc*E) each, O(Lq*Lc*E_max^2) total); the recurrence is an E_max/2 x
 algorithmic saving on table construction, with identical results.
 
-Two SELECTION layouts over that recurrence (DESIGN.md SS8):
-  * slab      — materialize the full (Lq, Lc) distance matrix and
-    lax.top_k it per E (the historical path; fastest at small Lc);
-  * streaming — scan over candidate tiles of width ``tile_c``, carrying a
-    running (Lq, k) top-k per E that each tile is merged into, so no
-    O(Lq*Lc) array is ever built.  Bit-identical to the slab path
-    (including tie order) for every k <= Lc.
+SELECTION is always STREAMING (DESIGN.md SS8): scan over candidate tiles
+of width ``tile_c``, partial-sort each tile to its own top-k, and fold it
+into a running sorted (Lq, k) table with the :func:`merge_topk_sorted`
+comparator network — no O(Lq*Lc) array is ever built, the working set is
+flat in Lc, and a tile covering the whole library degenerates to a single
+direct selection, so small libraries pay nothing for the tiling.  The
+historical dense distance-matrix layout survives only as the test/bench
+oracle (:func:`knn_tables_dense`); ``calibrate_knn_tile`` replaces its
+auto-threshold routing with a pure tile-width calibration
+(EDMConfig.knn_tile_c = 0).
 
-``resolve_knn_tile`` is the shared slab/streaming auto threshold used by
-every engine (EDMConfig.knn_tile_c).
+Bit-identity contract: streaming selection == ``lax.top_k`` over the full
+candidate row (values AND tie order) for every k <= Lc and any tile
+partition — see merge_topk_sorted / _knn_tables_streaming.
 """
 from __future__ import annotations
 
@@ -37,49 +41,184 @@ from repro.core.stats import simplex_weights
 
 INF = jnp.float32(jnp.inf)
 
-# Slab/streaming auto threshold (DESIGN.md SS8): below this candidate count
-# the (Lq, Lc) slab fits comfortably and lax.top_k over the full row is the
-# fastest selection; above it the streaming tiled merge keeps the distance
-# working set flat in Lc.  EDMConfig.knn_tile_c = 0 routes through this.
-SLAB_AUTO_MAX_LC = 4096
-# Default candidate-tile width for the auto streaming path: wide enough to
-# amortize the per-tile merge (k + tile_c columns), narrow enough that the
-# per-tile working set stays a few MB at paper block sizes.
-STREAM_DEFAULT_TILE_C = 1024
+# Ceiling of the per-program streaming working set the tile calibration
+# aims for: the 16 MB TPU VMEM size.  Wide tiles are the lever that
+# amortizes per-tile selection+merge dispatch overhead (measured: tile
+# 8192 beats 4096 by ~15% at Lc >= 16k); the KNN_TILE_MAX cap below is
+# what keeps the per-program footprint (~10 MB at the paper shape, see
+# stream_vmem_bytes) inside VMEM with double-buffer headroom.
+KNN_TILE_BUDGET_BYTES = 16 * 2**20
+# Lane-aligned bounds for calibrated candidate tiles: narrower than 128
+# wastes VPU lanes, wider than 8192 exceeds the VMEM budget at paper
+# shapes before it buys any more merge amortization.
+KNN_TILE_MIN, KNN_TILE_MAX = 128, 8192
+# Host (pure-jnp) streaming profile: the working set targets the CPU
+# last-level cache, not VMEM, and XLA:CPU's top_k carries a ~1.5 ms
+# fixed cost PER CALL (measured at 128 rows; two 8192-wide calls lose to
+# one 16384-wide call), so the host path calibrates against a wider
+# budget and cap — paper-scale libraries (L <= 16384) become a single
+# direct-selection tile on the reference engine.
+KNN_TILE_BUDGET_BYTES_HOST = 32 * 2**20
+KNN_TILE_MAX_HOST = 16384
 
 
-def resolve_knn_tile(Lc: int, knn_tile_c: int) -> int:
-    """Shared slab/streaming routing (EDMConfig.knn_tile_c semantics).
-
-    Returns 0 for the slab path or a positive candidate-tile width for the
-    streaming builders:  knn_tile_c = 0 -> auto (slab while Lc <=
-    SLAB_AUTO_MAX_LC, else streaming with STREAM_DEFAULT_TILE_C);
-    -1 -> force slab; > 0 -> force streaming with that tile width.
-    """
-    if knn_tile_c == -1:
-        return 0
-    if knn_tile_c == 0:
-        return 0 if Lc <= SLAB_AUTO_MAX_LC else STREAM_DEFAULT_TILE_C
-    return knn_tile_c
-
-
-def slab_bytes(Lq: int, Lc: int, dist_dtype=jnp.float32) -> int:
-    """Peak distance-working-set bytes of the SLAB selection path."""
-    return Lq * Lc * jnp.dtype(dist_dtype).itemsize
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 def streaming_bytes(
     Lq: int, k: int, tile_c: int, n_sel: int, dist_dtype=jnp.float32
 ) -> int:
-    """Peak distance-working-set bytes of the STREAMING selection path:
-    one (Lq, tile_c) tile in dist_dtype + the widest merge buffer
-    (Lq, k + tile_c) f32 pair + the (n_sel, Lq, k) running tables.
-    Independent of Lc — the streaming scaling guarantee (DESIGN.md SS8)."""
+    """Peak distance-working-set bytes of the streaming selection path:
+    one (Lq, tile_c) tile (dist_dtype accumulator + i32 candidate ids),
+    the tile's own (Lq, k) partial top-k, the DOUBLED (Lq, 2*K) merge
+    -network buffers (dist f32 + id i32 + rank i32, K = next pow2 >= k),
+    and the (n_sel, Lq, k) running tables.  Independent of Lc — the
+    streaming scaling guarantee (DESIGN.md SS8)."""
     it = jnp.dtype(dist_dtype).itemsize
-    tile = Lq * tile_c * it
-    merge = Lq * (k + tile_c) * (4 + 4)  # f32 dists + i32 ids
+    K = _next_pow2(k)
+    tile = Lq * tile_c * (it + 4)  # dist accumulator + i32 ids
+    tile_topk = Lq * k * (4 + 4)  # per-tile partial sort output
+    merge = Lq * 2 * K * (4 + 4 + 4)  # network: f32 dist + i32 id + i32 rank
     carry = n_sel * Lq * k * (4 + 4)
-    return tile + merge + carry
+    return tile + tile_topk + merge + carry
+
+
+@functools.lru_cache(maxsize=None)
+def calibrate_knn_tile(
+    Lc: int,
+    E_max: int = 20,
+    k: int = 21,
+    block_q: int = 128,
+    dist_dtype: str = "float32",
+    budget_bytes: int = KNN_TILE_BUDGET_BYTES,
+    tile_max: int = KNN_TILE_MAX,
+) -> int:
+    """One-shot candidate-tile-width calibration (EDMConfig.knn_tile_c=0).
+
+    Streaming with a tile covering the whole library IS the direct dense
+    selection (one tile, no merges), so the widest tile that fits the
+    working-set budget is optimal at every Lc: small libraries get the
+    single-tile fast case, large ones the flat-memory scan.  Picks the
+    largest power-of-two width in [KNN_TILE_MIN, KNN_TILE_MAX] not
+    exceeding ``budget_bytes`` under the :func:`streaming_bytes` model
+    (evaluated at one ``block_q`` query block — the Pallas per-program
+    shape), stopping early once the tile covers Lc.  Pure shape
+    arithmetic: no timing runs, stable across processes, cacheable.
+    """
+    if Lc < 1:
+        raise ValueError(f"Lc={Lc} must be positive")
+    tile = KNN_TILE_MIN
+    while tile < Lc and tile < tile_max:
+        nxt = tile * 2
+        if streaming_bytes(block_q, k, nxt, E_max, dist_dtype) > budget_bytes:
+            break
+        tile = nxt
+    return tile
+
+
+def resolve_stream_tile(Lc: int, cfg, profile: str = "vmem") -> int:
+    """EDMConfig.knn_tile_c semantics, shared by every engine: > 0 forces
+    that candidate-tile width, 0 auto-calibrates via
+    :func:`calibrate_knn_tile`.  -1 — the deleted dense distance-matrix
+    route — raises instead of silently selecting a layout that no longer
+    exists (EDMConfig construction already rejects it; this guards
+    config-like ducks).
+
+    ``profile`` picks the calibration budget for knn_tile_c=0: "vmem"
+    (default, safe on every backend) models the 16 MB Pallas per-program
+    footprint; "host" models the CPU cache for pure-jnp call sites,
+    allowing the wider tiles that amortize XLA:CPU's per-top_k-call
+    cost."""
+    if cfg.knn_tile_c > 0:
+        return cfg.knn_tile_c
+    if cfg.knn_tile_c < 0:
+        raise ValueError(
+            "knn_tile_c=-1 (the removed dense distance-matrix selection "
+            "path) is deprecated: selection is always streaming; use 0 "
+            "(auto-calibrated tile width) or a positive tile width"
+        )
+    budget, tile_max = (
+        (KNN_TILE_BUDGET_BYTES_HOST, KNN_TILE_MAX_HOST)
+        if profile == "host"
+        else (KNN_TILE_BUDGET_BYTES, KNN_TILE_MAX)
+    )
+    return calibrate_knn_tile(
+        Lc, E_max=cfg.E_max, k=cfg.k_max, dist_dtype=cfg.dist_dtype,
+        budget_bytes=budget, tile_max=tile_max,
+    )
+
+
+def merge_topk_sorted(run_i, run_d, new_i, new_d, k: int):
+    """Bitonic partial merge network for two sorted top-k lists.
+
+    run_i/run_d: (..., k) running top-k, ascending by (distance, arrival
+    order); new_i/new_d: (..., m <= k) incoming tile top-k, ascending in
+    its own arrival order.  Returns (idx, dist), each (..., k): the top-k
+    of the union, ascending, ties resolved running-before-new and
+    earlier-position-first within each list — exactly the
+    ``lax.top_k(concat([running, tile]))`` rule of the old merge, but as
+    a fixed O(k log k) comparator network instead of an O((k + tile)
+    log(k + tile))-class selection over the whole buffer.
+
+    Mechanics: pad both lists to K = next_pow2(k) with (+inf, id 2^31-1)
+    sentinels, attach explicit arrival ranks (running 0..K-1, new
+    K..2K-1) so the comparator key (distance, rank) is a strict total
+    order, lay out [running | reverse(new)] — ascending then descending,
+    i.e. bitonic — and run the log2(2K) halving compare-exchange stages.
+    (dist, id, rank) triples travel together through every exchange, so
+    the output order is deterministic and partition-independent; padding
+    sentinels order strictly after every real entry and can only surface
+    in the k > (real candidates) cases the builders reject.  Runs
+    unchanged inside the Pallas kernels (pure jnp ops on the VPU) and in
+    the jnp builders — one definition for the whole bit-identity
+    contract.
+    """
+    K = _next_pow2(k)
+
+    def _pad(i, d, rank0):
+        pad = K - d.shape[-1]
+        if pad:
+            shp = d.shape[:-1] + (pad,)
+            d = jnp.concatenate(
+                [d, jnp.full(shp, jnp.inf, jnp.float32)], axis=-1
+            )
+            i = jnp.concatenate(
+                [i, jnp.full(shp, 2147483647, jnp.int32)], axis=-1
+            )
+        r = rank0 + jax.lax.broadcasted_iota(jnp.int32, d.shape, d.ndim - 1)
+        return i, d, r
+
+    ai, ad, ar = _pad(run_i, run_d, 0)
+    bi, bd, br = _pad(new_i, new_d, K)
+    d = jnp.concatenate([ad, bd[..., ::-1]], axis=-1)
+    i = jnp.concatenate([ai, bi[..., ::-1]], axis=-1)
+    r = jnp.concatenate([ar, br[..., ::-1]], axis=-1)
+    lead = d.shape[:-1]
+    s = K
+    while s >= 1:
+        shape = lead + (K // s, 2, s)
+        dv = d.reshape(shape)
+        d_lo, d_hi = dv[..., 0, :], dv[..., 1, :]
+        iv = i.reshape(shape)
+        i_lo, i_hi = iv[..., 0, :], iv[..., 1, :]
+        rv = r.reshape(shape)
+        r_lo, r_hi = rv[..., 0, :], rv[..., 1, :]
+        sw = (d_lo > d_hi) | ((d_lo == d_hi) & (r_lo > r_hi))
+
+        def _apply(lo, hi, sw=sw, shape=shape, lead=lead):
+            return jnp.stack(
+                [jnp.where(sw, hi, lo), jnp.where(sw, lo, hi)], axis=-2
+            ).reshape(lead + (2 * K,))
+
+        d = _apply(d_lo, d_hi)
+        i = _apply(i_lo, i_hi)
+        r = _apply(r_lo, r_hi)
+        s //= 2
+    return i[..., :k], d[..., :k]
 
 # Trace-time instrumentation: total (Lq, k) table rows selected by the
 # builders below, keyed by builder kind.  jit caches traces, so tests that
@@ -97,13 +236,13 @@ def _acc_sq(D: jax.Array, vq: jax.Array, vc: jax.Array, dist_dtype) -> jax.Array
     """One cumulative-E distance update with PINNED square-then-add rounding.
 
     LLVM contracts ``D + (vq - vc)**2`` into an FMA inside some XLA:CPU
-    fusions but not others (scan body vs unrolled, slab vs tile shapes),
-    shifting results by 1 ulp and breaking the slab==streaming bit-identity
-    contract (DESIGN.md SS8).  The ``maximum(sq, 0)`` guard — numerically
-    exact, squares are non-negative — sits between the multiply and the
-    add, so no context can contract them; every cumulative builder (slab,
-    bucketed, streaming, single-E) therefore runs the identical
-    square-then-add float sequence.  ``optimization_barrier`` does NOT
+    fusions but not others (scan body vs unrolled, dense vs tile shapes),
+    shifting results by 1 ulp and breaking the dense==streaming
+    bit-identity contract (DESIGN.md SS8).  The ``maximum(sq, 0)`` guard —
+    numerically exact, squares are non-negative — sits between the
+    multiply and the add, so no context can contract them; every
+    cumulative builder (dense oracle, bucketed, streaming, single-E)
+    therefore runs the identical square-then-add float sequence.  ``optimization_barrier`` does NOT
     work here: it is dropped before the fusion/codegen stage that decides
     contraction, and ``abs`` is folded by the algebraic simplifier.
     """
@@ -111,7 +250,7 @@ def _acc_sq(D: jax.Array, vq: jax.Array, vc: jax.Array, dist_dtype) -> jax.Array
     return D + jnp.maximum(sq, jnp.zeros((), dist_dtype))
 
 
-def knn_tables_all_E(
+def knn_tables_dense(
     Vq: jax.Array,
     Vc: jax.Array,
     k_max: int,
@@ -119,7 +258,12 @@ def knn_tables_all_E(
     impl: str = "scan",
     dist_dtype=jnp.float32,
 ) -> tuple[jax.Array, jax.Array]:
-    """kNN tables for every embedding dimension 1..E_max in one pass.
+    """DENSE ORACLE: kNN tables for every embedding dimension 1..E_max by
+    materializing the full (Lq, Lc) distance matrix and lax.top_k-ing it
+    per E.  No engine routes here any more — selection is always
+    streaming — but this builder is the independent oracle the streaming
+    bit-identity tests and the benchmark historical-reference column
+    compare against, and the knn_impl A/B surface.
 
     Vq: (E_max, Lq) query lag matrix; Vc: (E_max, Lc) candidate lag matrix.
     Returns (indices, sq_dists), each (E_max, Lq, k_max); row e holds the
@@ -129,7 +273,7 @@ def knn_tables_all_E(
     impl (SSPerf hillclimb #3 knobs):
       scan    — cumulative-E lax.scan over lag increments (baseline);
       unroll  — same recurrence, python loop: XLA fuses the D update with
-                the following top_k read, cutting D-slab HBM round-trips;
+                the following top_k read, cutting D HBM round-trips;
       rebuild — per-E from-scratch matmul-form distances (O(L^2 E) each):
                 more MXU FLOPs, ~1/3 less D traffic — for compute-starved,
                 memory-bound cells.
@@ -180,9 +324,9 @@ def knn_tables_all_E(
         sq_dists = jnp.stack([o[1] for o in outs])
         return indices, sq_dists
     if impl.startswith("blocked"):
-        # scan over E-blocks of g unrolled steps: D-slab HBM round-trips
-        # drop ~g-fold (XLA fuses within a block) while only ~g slabs stay
-        # live — the peak-vs-traffic frontier knob (SSPerf HC3 #5).
+        # scan over E-blocks of g unrolled steps: D-matrix HBM round-trips
+        # drop ~g-fold (XLA fuses within a block) while only ~g distance
+        # matrices stay live — the peak-vs-traffic frontier knob (HC3 #5).
         def block_step(D, vs_blk):
             vq_b, vc_b = vs_blk  # (g, Lq), (g, Lc)
             outs = []
@@ -204,7 +348,7 @@ def knn_tables_all_E(
     return indices, sq_dists
 
 
-def knn_tables_bucketed(
+def knn_tables_bucketed_dense(
     Vq: jax.Array,
     Vc: jax.Array,
     k: int,
@@ -213,7 +357,10 @@ def knn_tables_bucketed(
     impl: str = "unroll",
     dist_dtype=jnp.float32,
 ) -> tuple[jax.Array, jax.Array]:
-    """kNN tables only for the embedding dimensions in ``buckets``.
+    """DENSE ORACLE, bucketed: tables only for the dimensions in
+    ``buckets`` via the full (Lq, Lc) distance matrix.  Test/bench oracle
+    only — every engine builds bucketed tables with the streaming merge
+    network (:func:`knn_tables_bucketed_streaming`).
 
     Phase-2 CCM never reads a table row whose E is absent from optE, so
     building just the distinct-optE bucket set (DESIGN.md SS3) cuts both
@@ -225,13 +372,13 @@ def knn_tables_bucketed(
 
     buckets: static ascending tuple of distinct E values (1-based).
     impl: "rebuild" builds each bucket's distances from scratch in matmul
-    form (the knn_tables_all_E "rebuild" numerics: near-ties may order
+    form (the knn_tables_dense "rebuild" numerics: near-ties may order
     differently); every other value uses the unrolled cumulative
     recurrence, whose sparse selection makes the scan/blocked sweep
     shapings moot.  Returns (idx, sq_dists), each (len(buckets), Lq, k);
     row b holds the table for embedding dimension buckets[b].  Cumulative
     numerics are bit-identical to the matching rows of the cumulative
-    knn_tables_all_E variants (same termwise-sequential accumulation
+    knn_tables_dense variants (same termwise-sequential accumulation
     order).
     """
     if not buckets or list(buckets) != sorted(set(buckets)):
@@ -282,27 +429,32 @@ def _knn_tables_streaming(
     col_offset=0,
     col_hi=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Candidate-tiled kNN selection: no (Lq, Lc) distance slab, ever.
+    """Candidate-tiled kNN selection: no (Lq, Lc) distance matrix, ever.
 
     Scans candidate tiles of width ``tile_c``; within each tile the
     cumulative-E recurrence accumulates a (Lq, tile_c) distance block, and
-    at every E in ``select_Es`` the tile is merged into the running (Lq, k)
-    table via ``top_k(concat([running, tile]))``.  The peak distance
-    working set is O(Lq * (k + tile_c)) + the (n_sel, Lq, k) carry —
+    at every E in ``select_Es`` the tile is partial-sorted to its own
+    top-k (lax.top_k over tile_c columns) and folded into the running
+    sorted (Lq, k) table with the :func:`merge_topk_sorted` comparator
+    network — O(k log k) per merge, independent of tile width.  The peak
+    distance working set is O(Lq * tile_c) + the (n_sel, Lq, k) carry —
     independent of Lc (DESIGN.md SS8).
 
-    BIT-IDENTITY with the CUMULATIVE slab impls (scan/unroll/blocked —
+    BIT-IDENTITY with ``lax.top_k`` over the full candidate row — and
+    hence with the CUMULATIVE dense-oracle impls (scan/unroll/blocked,
     NOT the matmul-form ``rebuild`` A/B shape, whose near-tie ordering
-    already differs from them), values AND tie order, argument:
+    already differs from them) — values AND tie order, argument:
     per-element distances accumulate lag terms in the same sequential
-    order, so they are bit-equal to the slab's; lax.top_k breaks value
-    ties by lowest position; in the merged buffer the running entries come
-    first and (by induction over tiles, the first tile being selected
-    directly with no synthetic carry) hold globally-smaller candidate ids
-    in tie-stable order, while tile columns follow in ascending global id
-    — so equal distances always resolve to the lowest candidate id,
-    exactly the slab lax.top_k rule.  Holds for every k <= Lc, including
-    all-tied (dead/duplicate-neuron) rows.
+    order, so they are bit-equal to the dense oracle's; lax.top_k breaks
+    value ties by lowest position; the running list is kept sorted by
+    (distance, arrival), tile entries excluded from a tile's own top-k
+    can never reach the union top-k, and the merge network's rank key
+    orders running entries (globally earlier candidates, by induction —
+    the first tile is selected directly with no synthetic carry) before
+    tile entries and tile entries by ascending position — so equal
+    distances always resolve to the lowest candidate id, exactly the
+    lax.top_k rule.  Holds for every k <= Lc, including all-tied
+    (dead/duplicate-neuron) rows, and for ANY tile partition.
 
     ``col_offset``/``col_hi`` (library sharding, DESIGN.md SS8): candidate
     column j of Vc is GLOBAL candidate ``col_offset + j``; columns at or
@@ -323,6 +475,11 @@ def _knn_tables_streaming(
     # be at least k wide; clamping also avoids over-padding tiny libraries.
     tile_c = max(k, min(tile_c, Lc))
     n_tiles = -(-Lc // tile_c)
+    # Balance tile widths under the calibrated cap: the same number of
+    # tiles, each ceil(Lc / n_tiles) wide, so the sweep pays at most
+    # n_tiles - 1 padded columns instead of a whole ragged tail tile
+    # (Lc=16000 under an 8192 cap -> 2 x 8000, zero padding).
+    tile_c = max(k, -(-Lc // n_tiles))
     Vq = Vq[:E_hi]
     Vc = jnp.pad(Vc[:E_hi], ((0, 0), (0, n_tiles * tile_c - Lc)))
     tiles = Vc.reshape(E_hi, n_tiles, tile_c).transpose(1, 0, 2)
@@ -337,24 +494,30 @@ def _knn_tables_streaming(
         invalid = jnp.broadcast_to(cols >= col_hi, (Lq, tile_c))
         if exclude_self:
             invalid = invalid | (cols == row_ids)
-        cols_b = jnp.broadcast_to(cols, (Lq, tile_c)).astype(jnp.int32)
         D = jnp.zeros((Lq, tile_c), dist_dtype)
-        out_i, out_d, si = [], [], 0
+        out_i, out_d = [], []
         for e in range(E_hi):
             D = _acc_sq(D, Vq[e], vc_t[e], dist_dtype)
             if e + 1 not in want:
                 continue
-            Dm = jnp.where(invalid, INF, D.astype(jnp.float32))
-            if run is None:
-                md, mi = Dm, cols_b
-            else:
-                md = jnp.concatenate([run[1][si], Dm], axis=1)
-                mi = jnp.concatenate([run[0][si], cols_b], axis=1)
-            neg_d, pos = jax.lax.top_k(-md, k)
-            out_i.append(jnp.take_along_axis(mi, pos, axis=1))
+            # Partial-sort the tile to its own top-k (sorted by distance,
+            # then position; mask and negate in one pass — -inf marks
+            # invalid columns, equivalent to +inf before negation).
+            neg_d, pos = jax.lax.top_k(
+                jnp.where(invalid, -INF, -D.astype(jnp.float32)), k
+            )
+            # tile ids are affine in position (col_offset + start + j for
+            # every column, valid or masked), so the id gather is an add
+            out_i.append((pos + start + col_offset).astype(jnp.int32))
             out_d.append(-neg_d)
-            si += 1
-        return jnp.stack(out_i), jnp.stack(out_d)
+        t_i, t_d = jnp.stack(out_i), jnp.stack(out_d)
+        if run is None:
+            return t_i, t_d
+        # ONE comparator-network merge batched over every selected E —
+        # same O(k log k) exchanges per row, 1/n_sel the op dispatches —
+        # folding the tile top-ks into the sorted running lists; never a
+        # (k + tile_c) buffer.
+        return merge_topk_sorted(run[0], run[1], t_i, t_d, k)
 
     carry = tile_tables(None, tiles[0], starts[0])
     if n_tiles == 1:
@@ -377,9 +540,11 @@ def knn_tables_all_E_streaming(
     col_offset=0,
     col_hi=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Streaming counterpart of :func:`knn_tables_all_E` — identical
-    (idx, sq_dists) tables, (E_max, Lq, k_max) each, built without ever
-    materializing the (Lq, Lc) distance slab (DESIGN.md SS8)."""
+    """All-E streaming tables — identical (idx, sq_dists) to the dense
+    oracle :func:`knn_tables_dense` (cumulative impls), (E_max, Lq, k_max)
+    each, built without ever materializing the (Lq, Lc) distance matrix
+    (DESIGN.md SS8).  THE engine selection path for phase 1 / unbucketed
+    phase 2."""
     E_max, Lq = Vq.shape
     unsharded = col_hi is None and isinstance(col_offset, int) and col_offset == 0
     if exclude_self and unsharded and Lq != Vc.shape[1]:
@@ -400,10 +565,11 @@ def knn_tables_bucketed_streaming(
     tile_c: int,
     dist_dtype=jnp.float32,
 ) -> tuple[jax.Array, jax.Array]:
-    """Streaming counterpart of :func:`knn_tables_bucketed` — identical
-    (len(buckets), Lq, k) tables; the per-tile distance accumulation still
-    sweeps e = 1..max(buckets) but selection (and the carry) exists only
-    at bucket dimensions."""
+    """Bucketed streaming tables — identical (len(buckets), Lq, k) tables
+    to the dense oracle :func:`knn_tables_bucketed_dense`; the per-tile
+    distance accumulation still sweeps e = 1..max(buckets) but selection
+    (and the carry) exists only at bucket dimensions.  THE engine
+    selection path for bucketed phase 2."""
     if not buckets or list(buckets) != sorted(set(buckets)):
         raise ValueError(f"buckets must be ascending and distinct: {buckets}")
     if exclude_self and Vq.shape[1] != Vc.shape[1]:
@@ -537,20 +703,23 @@ def knn_tables_prefix_streaming(
             if invalid is not None:
                 Dm = jnp.where(invalid, INF, Dm)
             dms.append(Dm)
-        # ONE batched merge per tile across all bucket dimensions (top_k
-        # batches over leading axes) — bit-identical to per-bucket merges
-        # but with len(buckets) x fewer host-visible ops, which is what
+        # ONE batched tile partial-sort + merge network per tile across
+        # all bucket dimensions (top_k and the comparator network batch
+        # over leading axes) — bit-identical to per-bucket merges but
+        # with len(buckets) x fewer host-visible ops, which is what
         # keeps the per-tile constant below a from-scratch rebuild's.
+        # Clipped boundary tiles can be narrower than k: the tile's own
+        # top-k is then just its full sorted width, padded to k with
+        # +inf sentinels inside merge_topk_sorted.
         Dsel = jnp.stack(dms)  # (nb, Lq, width)
         ids_nb = jnp.broadcast_to(ids_b, Dsel.shape)
+        neg_d, pos = jax.lax.top_k(-Dsel, min(k, width))
+        t_i = jnp.take_along_axis(ids_nb, pos, axis=-1)
+        t_d = -neg_d
         if run_i is None:
-            md, mi = Dsel, ids_nb
+            run_i, run_d = t_i, t_d  # first tile is >= k wide (validated)
         else:
-            md = jnp.concatenate([run_d, Dsel], axis=-1)
-            mi = jnp.concatenate([run_i, ids_nb], axis=-1)
-        neg_d, pos = jax.lax.top_k(-md, k)
-        run_i = jnp.take_along_axis(mi, pos, axis=-1)
-        run_d = -neg_d
+            run_i, run_d = merge_topk_sorted(run_i, run_d, t_i, t_d, k)
         if stop in boundary:
             snaps_i.append(run_i)
             snaps_d.append(run_d)
@@ -603,7 +772,7 @@ def merge_shard_tables(
     indices are GLOBAL candidate ids (each shard selected over its own
     candidate slice via ``col_offset``).  The merge key is
     (distance ascending, id ascending) — exactly lax.top_k's tie rule —
-    so merging shard tables reproduces the unsharded slab/streaming table
+    so merging shard tables reproduces the unsharded streaming table
     bit-for-bit whenever k <= the global candidate count.
     """
     idx = np.concatenate([np.asarray(p) for p in idx_parts], axis=-1)
@@ -642,7 +811,7 @@ def knn_table_single_E(
     Used by the naive baseline and as an oracle for the Pallas kernel.
 
     matmul_form=False accumulates lag terms sequentially — bit-identical to
-    the cumulative scan in knn_tables_all_E, so naive vs improved equivalence
+    the cumulative scan in knn_tables_dense, so naive vs improved equivalence
     tests are exact.  matmul_form=True uses |q|^2 + |c|^2 - 2 q.c, the
     MXU-friendly form the Pallas kernel implements.
     candidate_mask: optional (Lc,) bool — library subsampling for the CCM

@@ -237,8 +237,8 @@ def knn_tables_library_sharded(
     Each device selects top-k over its candidate shard (streaming
     builders, global column ids); a host-side merge keyed on
     (distance, id) — the lax.top_k tie rule — reduces the shard tables,
-    so the result is bit-identical to the single-device slab/streaming
-    table whenever k <= Lc.  Returns host (idx, sq_dists), each
+    so the result is bit-identical to the single-device streaming table
+    whenever k <= Lc.  Returns host (idx, sq_dists), each
     (E_max, Lq, k).
     """
     if mesh is None:
@@ -251,7 +251,7 @@ def knn_tables_library_sharded(
     Vc_p = jnp.pad(jnp.asarray(Vc), ((0, 0), (0, shard * W - Lc)))
     lo = np.arange(W, dtype=np.int32) * shard
     bounds = np.stack([lo, np.minimum(lo + shard, Lc)], axis=1)
-    tile_c = knn.resolve_knn_tile(shard, cfg.knn_tile_c) or shard
+    tile_c = knn.resolve_stream_tile(shard, cfg, profile="host")
     # A shard narrower than k still contributes all its candidates; the
     # global top-k can draw at most min(k, shard) entries from one shard.
     k_s = min(k, shard)

@@ -43,16 +43,18 @@ class EDMConfig:
         host (no (N, N) map when streaming to a store) and
         O(lib_block x buckets x Lp x k + tile x Lp) per device (no
         (N, Lp) replication).
-      knn_tile_c: kNN SELECTION layout (DESIGN.md SS8).  0 (default) =
-        auto: the (Lq, Lc) distance-slab path while the candidate count is
-        at most knn.SLAB_AUTO_MAX_LC, else streaming candidate tiles of
-        knn.STREAM_DEFAULT_TILE_C.  > 0 = force the streaming builders
-        with that tile width; -1 = force the slab path.  Streaming keeps
-        the distance working set O(Lq x (k + tile)) — independent of the
-        library length — and is bit-identical to the slab path (values
-        and tie order) on every engine, for every CUMULATIVE knn_impl;
-        knn_impl="rebuild" (matmul-form A/B numerics) applies only while
-        the slab route is active, so pin knn_tile_c=-1 alongside it.
+      knn_tile_c: streaming kNN candidate-tile width (DESIGN.md SS8).
+        Selection is ALWAYS streaming: candidate tiles folded through the
+        running sorted top-k via the partial merge network.  0 (default)
+        = one-shot calibration (knn.calibrate_knn_tile: widest
+        power-of-two tile under the VMEM budget — a tile covering the
+        whole library degenerates to one direct selection, so small
+        libraries lose nothing).  > 0 = force that tile width.  -1 (the
+        removed dense distance-matrix selection path) raises a
+        deprecation error.  The distance working set is
+        O(Lq x (tile + k log k)) — independent of the library length —
+        and every tile width is bit-identical to the dense lax.top_k
+        oracle (values and tie order) on every engine.
       use_kernels: DEPRECATED alias — True selects engine="pallas-compiled"
         (the old kernel routing), False engine="reference".
     """
@@ -68,18 +70,19 @@ class EDMConfig:
     stream_depth: int = 2
     target_tile: int = 0
     use_kernels: Optional[bool] = None
-    # kNN table construction variants (SSPerf hillclimb #3):
+    # Accumulation variant of the DENSE ORACLE builders (knn_tables_dense
+    # and friends — the lax.top_k A/B reference used by tests and
+    # benchmarks; no engine routes through them):
     #   rebuild    — per-E matmul-form rebuild (the PAPER-FAITHFUL shape:
     #                mpEDM recomputes each E's kNN from scratch)
     #   scan       — cumulative-E lax.scan (beyond-paper; cost_analysis
     #                cannot see scan bodies, so dry-runs avoid it)
     #   unroll     — cumulative-E python loop (XLA fuses consecutive updates)
-    #   blocked:g  — scan over blocks of g unrolled steps: the peak-memory /
-    #                HBM-traffic frontier (DEFAULT; falls back to unroll
-    #                when E_max %% g != 0)
+    #   blocked:g  — scan over blocks of g unrolled steps (DEFAULT; falls
+    #                back to unroll when E_max %% g != 0)
     knn_impl: str = "blocked:4"
-    dist_dtype: str = "float32"  # bfloat16 halves D-slab/tile HBM traffic
-    knn_tile_c: int = 0  # 0 auto; >0 streaming tile width; -1 force slab
+    dist_dtype: str = "float32"  # bfloat16 halves distance-tile HBM traffic
+    knn_tile_c: int = 0  # 0 auto-calibrated; >0 forced streaming tile width
     # k_override: pins the neighbour-table width independent of E_max —
     # used by the dry-run's reduced-E cost compiles so per-E bodies carry
     # the PRODUCTION top-k cost (k tracks E_max otherwise).  None = unset
@@ -112,10 +115,17 @@ class EDMConfig:
             raise ValueError("stream_depth must be >= 1")
         if self.target_tile < 0:
             raise ValueError("target_tile must be >= 0 (0 = untiled)")
-        if self.knn_tile_c < -1:
+        if self.knn_tile_c == -1:
             raise ValueError(
-                f"knn_tile_c={self.knn_tile_c} is invalid: 0 = auto, "
-                "> 0 = streaming tile width, -1 = force slab"
+                "knn_tile_c=-1 (the removed dense distance-matrix "
+                "selection path) is deprecated: selection is always "
+                "streaming; pass 0 (auto-calibrated tile width) or a "
+                "positive tile width"
+            )
+        if self.knn_tile_c < 0:
+            raise ValueError(
+                f"knn_tile_c={self.knn_tile_c} is invalid: 0 = "
+                "auto-calibrated tile width, > 0 = forced tile width"
             )
         if self.k_override is not None and self.k_override < 1:
             raise ValueError(

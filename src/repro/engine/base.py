@@ -39,23 +39,26 @@ class Engine:
     # -------------------------------------------------------------- ops
     @staticmethod
     def knn_selection_tile(Lc: int, cfg) -> int:
-        """Shared slab/streaming routing for kNN-table construction
-        (DESIGN.md SS8): 0 = build the (Lq, Lc) distance slab, > 0 =
-        stream candidate tiles of that width.  One resolver for every
-        backend so cfg.knn_tile_c means the same thing under all engines
-        and the slab path stays the small-L fast case."""
+        """Candidate-tile width for the (always streaming) kNN-table
+        construction (DESIGN.md SS8): cfg.knn_tile_c > 0 forces that
+        width, 0 takes the one-shot VMEM-budget calibration
+        (knn.calibrate_knn_tile).  One resolver for every backend so
+        cfg.knn_tile_c means the same thing under all engines.  Always
+        returns a positive width — a tile covering the whole library
+        degenerates to one direct selection, so small libraries pay
+        nothing for the tiling."""
         from repro.core import knn
 
-        return knn.resolve_knn_tile(Lc, cfg.knn_tile_c)
+        return knn.resolve_stream_tile(Lc, cfg)
 
     def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
         """kNN tables for every embedding dimension 1..E_max.
 
         Vq: (E_max, Lq) query lag matrix, Vc: (E_max, Lc) candidates.
         Returns (idx, sq_dists), each (E_max, Lq, k).  Implementations
-        route through :meth:`knn_selection_tile`; slab and streaming
-        selections are bit-identical, so the routing is invisible to
-        callers.
+        stream candidate tiles of width :meth:`knn_selection_tile`
+        through the running sorted-merge; the tiling is invisible to
+        callers (any tile width is bit-identical to the dense oracle).
         """
         raise NotImplementedError
 
@@ -89,20 +92,17 @@ class Engine:
         making the prefixes seeded random subsamples (DESIGN.md SS9).
         Returns (idx, sq_dists), each (len(lib_sizes), len(buckets), Lq, k).
 
-        Default: the old-style per-size rebuild — one independent
-        streaming sweep per library size.  Correct on every backend; the
-        reference engine overrides with the ONE-sweep prefix-snapshot
-        builder (bit-identical output, ~S x less candidate traffic).
-        A prefix-snapshotting Pallas kernel (running VMEM top-k flushed
-        at boundary tiles) is future work, so the Pallas engines inherit
-        this fallback.
+        Default: the per-size rebuild oracle — one independent streaming
+        sweep per library size.  Correct on every backend, but every
+        concrete engine overrides it with a ONE-sweep prefix-snapshot
+        path (bit-identical output, ~S x less candidate traffic): the
+        reference engine with the jnp one-sweep builder, the Pallas
+        engines with the in-kernel snapshot kernel (running VMEM top-k
+        emitted at library-size boundary tiles).
         """
         from repro.core import knn
 
-        tile = (
-            self.knn_selection_tile(Vc.shape[1], cfg)
-            or knn.STREAM_DEFAULT_TILE_C
-        )
+        tile = self.knn_selection_tile(Vc.shape[1], cfg)
         return knn.knn_tables_prefix_rebuild(
             Vq, Vc, k, exclude_self, buckets, lib_sizes, tile,
             dist_dtype=jnp.dtype(cfg.dist_dtype), col_ids=col_ids,

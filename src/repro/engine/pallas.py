@@ -6,9 +6,11 @@ falls back to interpret mode elsewhere (exactly the old
 interpret mode everywhere so the kernel numerics can be validated on any
 backend, including TPU hosts.
 
-Both route kNN-table construction through kernels/knn_topk and the batched
-CCM lookup through kernels/ccm_lookup (previously dead code — now the
-lookup op of every bucketed CCM phase under these engines).
+Both route kNN-table construction through the streaming kernels in
+kernels/knn_topk — including the in-kernel prefix-snapshot kernel for
+``knn_tables_prefix`` (DESIGN.md SS9), so the CCM convergence diagnostic
+no longer rebuilds per library size — and the batched CCM lookup through
+kernels/ccm_lookup.
 """
 from __future__ import annotations
 
@@ -25,25 +27,33 @@ class PallasEngine(Engine):
         return default_interpret() if self.interpret is None else self.interpret
 
     def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
-        from repro.kernels.knn_topk.ops import knn_topk, knn_topk_streaming
+        from repro.kernels.knn_topk.ops import knn_topk_streaming
 
+        # Streaming kernel (DESIGN.md SS8): per-program VMEM is flat in
+        # Lc, so library length is HBM-bound, not VMEM-bound.
         tile = self.knn_selection_tile(Vc.shape[1], cfg)
-        if tile:
-            # Streaming kernel (DESIGN.md SS8): per-program VMEM is flat
-            # in Lc, so library length is HBM-bound, not VMEM-bound.
-            return knn_topk_streaming(
-                Vq, Vc, k, exclude_self=exclude_self, tile_c=tile,
-                dist_dtype=cfg.dist_dtype, interpret=self._interpret(),
-            )
-        return knn_topk(
-            Vq, Vc, k, exclude_self=exclude_self,
+        return knn_topk_streaming(
+            Vq, Vc, k, exclude_self=exclude_self, tile_c=tile,
             dist_dtype=cfg.dist_dtype, interpret=self._interpret(),
         )
 
     # knn_tables_bucketed: the base truncate-to-max(buckets) + gather
-    # (routed through knn_tables above, so it inherits the slab/streaming
-    # selection) is the whole saving available without a bucket-aware
-    # kernel (in-kernel bucket masking: DESIGN.md SS3, future work).
+    # (routed through knn_tables above, so it inherits the resolved tile
+    # width) is the whole saving available without a bucket-aware kernel
+    # (in-kernel bucket masking: DESIGN.md SS3, future work).
+
+    def knn_tables_prefix(
+        self, Vq, Vc, k, *, buckets, lib_sizes, exclude_self, cfg,
+        col_ids=None,
+    ):
+        from repro.kernels.knn_topk.ops import knn_topk_prefix
+
+        tile = self.knn_selection_tile(Vc.shape[1], cfg)
+        return knn_topk_prefix(
+            Vq, Vc, k, exclude_self, tuple(buckets), tuple(lib_sizes),
+            tile_c=tile, dist_dtype=cfg.dist_dtype,
+            interpret=self._interpret(), col_ids=col_ids,
+        )
 
     def ccm_lookup(self, idx, w, Y_fut):
         from repro.kernels.ccm_lookup.ops import ccm_lookup

@@ -1,15 +1,12 @@
 """Pure-jnp reference engine — the oracle path (DESIGN.md SS5).
 
-Delegates to core/knn.py, honouring the ``knn_impl`` / ``dist_dtype``
-hillclimb knobs on EDMConfig and the slab/streaming selection routing
-(``knn_tile_c``, DESIGN.md SS8): small libraries take the slab +
-lax.top_k path, large ones the candidate-tiled streaming scan.
-Streaming is bit-identical to the CUMULATIVE slab impls
-(scan/unroll/blocked); ``knn_impl="rebuild"`` — the paper-faithful
-matmul-form A/B shape, whose near-tie ordering already differs from the
-cumulative impls — is honoured only while the slab route is active, so
-runs that pin it for an A/B should also pin ``knn_tile_c=-1`` to keep
-the shape across the auto threshold.
+Delegates to the streaming builders in core/knn.py: candidate tiles of
+the resolved width (``knn_tile_c``; 0 = one-shot VMEM-budget
+calibration) folded through the running sorted-merge network.  Honours
+the ``dist_dtype`` hillclimb knob (bfloat16 accumulate + f32 merge
+keys).  Any tile width is bit-identical to the dense lax.top_k oracle
+(``knn.knn_tables_dense``), which survives only as the A/B reference for
+tests and benchmarks.
 """
 from __future__ import annotations
 
@@ -21,18 +18,22 @@ from repro.engine.base import Engine
 class ReferenceEngine(Engine):
     name = "reference"
 
+    @staticmethod
+    def knn_selection_tile(Lc, cfg):
+        from repro.core import knn
+
+        # Host profile: XLA:CPU top_k carries a large fixed per-call cost,
+        # so the jnp path wants the widest tile the cache budget allows
+        # (paper-scale L <= 16384 runs as a single direct-selection tile).
+        return knn.resolve_stream_tile(Lc, cfg, profile="host")
+
     def knn_tables(self, Vq, Vc, k, *, exclude_self, cfg):
         from repro.core import knn
 
         tile = self.knn_selection_tile(Vc.shape[1], cfg)
-        if tile:
-            return knn.knn_tables_all_E_streaming(
-                Vq, Vc, k, exclude_self=exclude_self, tile_c=tile,
-                dist_dtype=jnp.dtype(cfg.dist_dtype),
-            )
-        return knn.knn_tables_all_E(
-            Vq, Vc, k, exclude_self=exclude_self,
-            impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),
+        return knn.knn_tables_all_E_streaming(
+            Vq, Vc, k, exclude_self=exclude_self, tile_c=tile,
+            dist_dtype=jnp.dtype(cfg.dist_dtype),
         )
 
     def knn_tables_prefix(
@@ -41,10 +42,7 @@ class ReferenceEngine(Engine):
     ):
         from repro.core import knn
 
-        tile = (
-            self.knn_selection_tile(Vc.shape[1], cfg)
-            or knn.STREAM_DEFAULT_TILE_C
-        )
+        tile = self.knn_selection_tile(Vc.shape[1], cfg)
         return knn.knn_tables_prefix_streaming(
             Vq, Vc, k, exclude_self, buckets, lib_sizes, tile,
             dist_dtype=jnp.dtype(cfg.dist_dtype), col_ids=col_ids,
@@ -54,12 +52,7 @@ class ReferenceEngine(Engine):
         from repro.core import knn
 
         tile = self.knn_selection_tile(Vc.shape[1], cfg)
-        if tile:
-            return knn.knn_tables_bucketed_streaming(
-                Vq, Vc, k, exclude_self=exclude_self, buckets=buckets,
-                tile_c=tile, dist_dtype=jnp.dtype(cfg.dist_dtype),
-            )
-        return knn.knn_tables_bucketed(
+        return knn.knn_tables_bucketed_streaming(
             Vq, Vc, k, exclude_self=exclude_self, buckets=buckets,
-            impl=cfg.knn_impl, dist_dtype=jnp.dtype(cfg.dist_dtype),
+            tile_c=tile, dist_dtype=jnp.dtype(cfg.dist_dtype),
         )

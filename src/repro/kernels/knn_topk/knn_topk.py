@@ -1,32 +1,42 @@
 """Pallas TPU kernels: cumulative multi-E pairwise distances + fused top-k.
 
 The paper's hot spot (97% of cppEDM runtime) re-architected for TPU
-(DESIGN.md SS2/SS8).  Two selection layouts:
+(DESIGN.md SS2/SS8).  ONE selection layout — STREAMING:
 
-SLAB (``knn_topk_kernel``, small libraries): one pass over query
-row-blocks; the (block_q, Lc_pad) distance slab lives in VMEM and is
-*accumulated* across embedding dimensions E = 1..E_max (cumulative
-recurrence) instead of rebuilt per E.  Per-program VMEM grows with Lc
-(~4.6 MB at BQ=128, Lc=8528, E_max=20), capping library length at a few
-thousand frames.
+``knn_topk_stream_kernel``: the grid has a minor-most CANDIDATE-TILE
+dimension.  Each program accumulates a (block_q, tile_c) distance tile
+on-chip from the lag slices, partial-sorts the tile to its own top-k
+with the k-pass selector, and folds it into a running SORTED
+(E_max, block_q, k) top-k carried in VMEM scratch across tiles via the
+shared bitonic partial merge network (core/knn.merge_topk_sorted) —
+O(k log k) per merge, independent of tile width.  Per-program VMEM is
+O(E_max*tile_c + block_q*tile_c + E_max*block_q*k) — INDEPENDENT of Lc
+(``stream_block_shapes`` is the pure shape function the CI guard asserts
+on): arbitrary library lengths fit a 16 MB VMEM budget, and a tile
+covering the whole library degenerates to one direct selection, so small
+libraries pay nothing for the tiling.  (The historical dense
+distance-matrix kernel is gone; ``benchmarks/run.py knn`` keeps a local
+copy as the A/B reference.)
 
-STREAMING (``knn_topk_stream_kernel``, DESIGN.md SS8): the grid gains a
-second, minor-most CANDIDATE-TILE dimension.  Each program accumulates a
-(block_q, tile_c) distance tile on-chip from the lag slices and merges it
-into a running (E_max, block_q, k) top-k carried in VMEM scratch across
-tiles, so per-program VMEM is O(E_max*tile_c + block_q*tile_c +
-E_max*block_q*k) — INDEPENDENT of Lc (``stream_block_shapes`` is the
-pure shape function the CI guard asserts on): arbitrary library lengths
-fit a 16 MB VMEM budget.
+``knn_topk_prefix_kernel``: the same running merge with candidate tiles
+CLIPPED at library-size boundaries (DESIGN.md SS9): candidates are
+pre-gathered into sweep order (applying the optional ``col_ids``
+permutation), each clipped segment padded to ``tile_c`` with masked
+id -1 columns, and the running carry is emitted to the per-size output
+slot at every boundary tile — the one-sweep prefix-snapshot tables of
+the CCM convergence diagnostic, in-kernel, replacing the per-size
+rebuild fallback the Pallas engines used to inherit.
 
-Shared selection machinery: top-k is a fused k-pass masked argmin on the
-VPU (k = E+1 <= 21); TPU has no radix-sort analogue, and k-pass selection
-is O(k*width) vector work per row versus O(width log width) for a sort.
-Candidate columns are padded to the lane boundary and masked with _BIG.
-Tie rule: argmin picks the first minimum position, which in both layouts
-resolves equal distances to the LOWEST candidate index — the lax.top_k
-rule — so slab, streaming, and the jnp builders agree bit-for-bit
-(see knn_topk_stream_kernel's merge-order note).
+Shared selection machinery: the per-tile top-k is a fused k-pass masked
+argmin on the VPU (k = E+1 <= 21); TPU has no radix-sort analogue, and
+k-pass selection is O(k*width) vector work per row versus
+O(width log width) for a sort.  Candidate columns are padded to the lane
+boundary and masked with _BIG.  Tie rule: argmin picks the first minimum
+position, and the merge network's (distance, rank) key keeps running
+entries ahead of tile entries — equal distances always resolve to the
+earliest sweep position (the lowest candidate id in natural order),
+exactly the lax.top_k rule, so the kernels and the jnp builders agree
+bit-for-bit.
 
 Ragged queries: wrappers split the query axis into full ``block_q``
 blocks plus one 8-row-aligned tail block (``_query_splits``), so a ragged
@@ -34,22 +44,25 @@ Lq pays O(8) padded rows of selection work instead of a whole extra
 block.
 
 ``dist_dtype`` (EDMConfig.dist_dtype): the distance ACCUMULATOR runs in
-this dtype (bfloat16 halves the tile/slab working set); merge keys and
-output distances are always float32.
+this dtype (bfloat16 halves the tile working set); merge keys and output
+distances are always float32.
 """
 from __future__ import annotations
 
+import bisect
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# THE shared pinned-rounding accumulate (maximum(sq, 0) FMA guard): one
-# definition for the jnp builders, the kernels, and the ref oracle — the
-# exact float sequence the cross-layout bit-identity contract rests on.
-from repro.core.knn import _acc_sq
+# THE shared pinned-rounding accumulate (maximum(sq, 0) FMA guard) and THE
+# shared partial merge network: one definition each for the jnp builders,
+# the kernels, and the ref oracle — the exact float/compare sequences the
+# cross-layout bit-identity contract rests on.
+from repro.core.knn import _next_pow2, _acc_sq, merge_topk_sorted
 
 _BIG = 3.0e38  # finite +inf stand-in (avoids inf-inf NaNs)
 _IMAX = 2147483647  # python literal: a jnp scalar here would be captured
@@ -71,12 +84,13 @@ def _query_splits(Lq: int, block_q: int) -> list[tuple[int, int, int]]:
     return splits
 
 
-def _over_query_splits(Vq, block_q, call_split):
-    """Shared wrapper scaffold for both layouts: run ``call_split(Vq_p,
-    row0, rows_pad, bq)`` -> (idx, dist) over the _query_splits plan
-    (padding each split to a block multiple) and stitch the per-split
-    results back along the query axis."""
+def _over_query_splits(Vq, block_q, call_split, q_axis: int = 1):
+    """Shared wrapper scaffold: run ``call_split(Vq_p, row0, rows_pad,
+    bq)`` -> (idx, dist) over the _query_splits plan (padding each split
+    to a block multiple) and stitch the per-split results back along the
+    query axis (``q_axis`` of the OUTPUT arrays)."""
     Lq = Vq.shape[1]
+    take = (slice(None),) * q_axis
     outs = []
     for row0, rows, bq in _query_splits(Lq, block_q):
         rows_pad = pl.cdiv(rows, bq) * bq
@@ -84,33 +98,46 @@ def _over_query_splits(Vq, block_q, call_split):
             Vq[:, row0 : row0 + rows], ((0, 0), (0, rows_pad - rows))
         )
         idx, dist = call_split(Vq_p, row0, rows_pad, bq)
-        outs.append((idx[:, :rows], dist[:, :rows]))
+        outs.append((idx[take + (slice(0, rows),)],
+                     dist[take + (slice(0, rows),)]))
     if len(outs) == 1:
         return outs[0]
     return (
-        jnp.concatenate([o[0] for o in outs], axis=1),
-        jnp.concatenate([o[1] for o in outs], axis=1),
+        jnp.concatenate([o[0] for o in outs], axis=q_axis),
+        jnp.concatenate([o[1] for o in outs], axis=q_axis),
     )
 
 
 def _kpass_select(md, mi, k, width):
     """Fused k-pass masked-argmin top-k over a (rows, width) buffer.
 
-    md: f32 merge keys; mi: i32 candidate ids per column.  Selected
-    positions are knocked out with +inf (strictly above the _BIG mask
-    value, so an already-taken position can never shadow a real masked
-    candidate).  Returns (ids, dists) each (rows, k), sorted ascending
-    with ties resolved to the earliest buffer position.
+    md: f32 merge keys; mi: i32 candidate ids per column, OR a scalar
+    BASE when the ids are affine in the column position (id = base +
+    column, the stream kernel's natural-order tiles) — the affine form
+    skips the full-width id-extraction gather (``base + argmin`` is a
+    per-row scalar add), about a fifth of the per-pass VPU work.
+    Selected positions are knocked out with +inf (strictly above the
+    _BIG mask value, so an already-taken position can never shadow a
+    real masked candidate).  Returns (ids, dists) each (rows, k), sorted
+    ascending with ties resolved to the earliest buffer position —
+    identical for both id forms (argmin picks exactly one position, so
+    the gathered id IS base + argmin).
     """
     rows = md.shape[0]
     pos = jax.lax.broadcasted_iota(jnp.int32, (rows, width), 1)
+    affine = jnp.ndim(mi) == 0
 
     def body(kk, carry):
         md_cur, idxs, dists = carry
         m = jnp.min(md_cur, axis=1)
         am = jnp.argmin(md_cur, axis=1).astype(jnp.int32)
         hit = pos == am[:, None]
-        sel = jnp.min(jnp.where(hit, mi, jnp.full((), _IMAX, jnp.int32)), axis=1)
+        if affine:
+            sel = mi + am
+        else:
+            sel = jnp.min(
+                jnp.where(hit, mi, jnp.full((), _IMAX, jnp.int32)), axis=1
+            )
         idxs = jax.lax.dynamic_update_index_in_dim(idxs, sel, kk, axis=1)
         dists = jax.lax.dynamic_update_index_in_dim(dists, m, kk, axis=1)
         md_cur = jnp.where(hit, jnp.float32(jnp.inf), md_cur)
@@ -129,87 +156,6 @@ def _kpass_select(md, mi, k, width):
     return idxs, dists
 
 
-# ------------------------------------------------------------------ slab
-def knn_topk_kernel(
-    vq_ref,
-    vc_ref,
-    idx_ref,
-    dist_ref,
-    *,
-    E_max: int,
-    k: int,
-    Lc: int,
-    block_q: int,
-    exclude_self: bool,
-    row0: int = 0,
-    dist_dtype=jnp.float32,
-):
-    Lc_pad = vc_ref.shape[1]
-    qi = pl.program_id(0)
-    col_ids = jax.lax.broadcasted_iota(jnp.int32, (block_q, Lc_pad), 1)
-    invalid = col_ids >= Lc
-    if exclude_self:
-        row_ids = row0 + qi * block_q + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, Lc_pad), 0
-        )
-        invalid = invalid | (col_ids == row_ids)
-
-    D = jnp.zeros((block_q, Lc_pad), dist_dtype)
-    for e in range(E_max):  # static unroll: E_max <= 20
-        D = _acc_sq(D, vq_ref[e, :], vc_ref[e, :], dist_dtype)
-        Dm = jnp.where(invalid, _BIG, D.astype(jnp.float32))
-        idxs, dists = _kpass_select(Dm, col_ids, k, Lc_pad)
-        idx_ref[e] = idxs
-        dist_ref[e] = dists
-
-
-def knn_topk_pallas(
-    Vq: jax.Array,
-    Vc: jax.Array,
-    k: int,
-    exclude_self: bool,
-    block_q: int = 128,
-    interpret: bool = True,
-    dist_dtype=jnp.float32,
-) -> tuple[jax.Array, jax.Array]:
-    """Raw pallas_call wrapper; padding/unpadding handled by ops.knn_topk."""
-    E_max = Vq.shape[0]
-    Lc = Vc.shape[1]
-    Lc_pad = pl.cdiv(Lc, 128) * 128
-    Vc_p = jnp.pad(Vc, ((0, 0), (0, Lc_pad - Lc)))
-
-    def call_split(Vq_p, row0, rows_pad, bq):
-        kernel = functools.partial(
-            knn_topk_kernel,
-            E_max=E_max,
-            k=k,
-            Lc=Lc,
-            block_q=bq,
-            exclude_self=exclude_self,
-            row0=row0,
-            dist_dtype=dist_dtype,
-        )
-        return pl.pallas_call(
-            kernel,
-            grid=(rows_pad // bq,),
-            in_specs=[
-                pl.BlockSpec((E_max, bq), lambda i: (0, i)),
-                pl.BlockSpec((E_max, Lc_pad), lambda i: (0, 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((E_max, bq, k), lambda i: (0, i, 0)),
-                pl.BlockSpec((E_max, bq, k), lambda i: (0, i, 0)),
-            ],
-            out_shape=[
-                jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.int32),
-                jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.float32),
-            ],
-            interpret=interpret,
-        )(Vq_p, Vc_p)
-
-    return _over_query_splits(Vq, block_q, call_split)
-
-
 # ------------------------------------------------------------- streaming
 def stream_block_shapes(
     E_max: int, k: int, block_q: int, tile_c: int
@@ -221,6 +167,11 @@ def stream_block_shapes(
     scaling guarantee the CI guard test asserts (tests/test_knn_streaming).
     ``knn_topk_stream_pallas`` builds its BlockSpecs and scratch from this
     dict, so the guard constrains the real kernel, not a copy.
+
+    ``tile_ids``/``tile_topk``/``merge`` are kernel-internal working
+    arrays (the candidate-id lanes, the tile's own partial top-k, and the
+    DOUBLED (2 * next_pow2(k)) merge-network buffers), tracked here so
+    ``stream_vmem_bytes`` models the true peak.
     """
     return {
         "vq": (E_max, block_q),
@@ -228,7 +179,9 @@ def stream_block_shapes(
         "out": (E_max, block_q, k),
         "scratch_idx": (E_max, block_q, k),
         "scratch_dist": (E_max, block_q, k),
-        "merge": (block_q, k + tile_c),
+        "tile_ids": (block_q, tile_c),
+        "tile_topk": (block_q, k),
+        "merge": (block_q, 2 * _next_pow2(k)),
     }
 
 
@@ -236,8 +189,11 @@ def stream_vmem_bytes(
     E_max: int, k: int, block_q: int, tile_c: int, dist_dtype=jnp.float32
 ) -> int:
     """VMEM budget estimate for one streaming program (DESIGN.md SS8):
-    blocks + scratch + the distance tile (dist_dtype) + the f32/i32 merge
-    buffers.  Independent of Lc."""
+    blocks + scratch + the distance tile (dist_dtype) + the candidate-id
+    lanes + the tile partial top-k + the merge network's doubled
+    (dist f32, id i32, rank i32) working triples — the top-k scratch
+    doubling the pre-merge-network model used to omit.  Independent of
+    Lc."""
     s = stream_block_shapes(E_max, k, block_q, tile_c)
     n = lambda shp: functools.reduce(lambda a, b: a * b, shp, 1)
     it = jnp.dtype(dist_dtype).itemsize
@@ -246,7 +202,9 @@ def stream_vmem_bytes(
         + 4 * (n(s["out"]) * 2)  # idx + dist output blocks
         + 4 * (n(s["scratch_idx"]) + n(s["scratch_dist"]))
         + it * block_q * tile_c  # distance tile accumulator
-        + (4 + 4) * n(s["merge"])  # f32 keys + i32 ids
+        + 4 * n(s["tile_ids"])  # i32 candidate-id lanes
+        + (4 + 4) * n(s["tile_topk"])  # tile partial top-k (id + dist)
+        + (4 + 4 + 4) * n(s["merge"])  # merge network (dist, id, rank)
     )
 
 
@@ -255,8 +213,8 @@ def knn_topk_stream_kernel(
     vc_ref,
     idx_ref,
     dist_ref,
-    idx_s,
-    dist_s,
+    idx_s=None,
+    dist_s=None,
     *,
     E_max: int,
     k: int,
@@ -266,28 +224,28 @@ def knn_topk_stream_kernel(
     exclude_self: bool,
     row0: int = 0,
     dist_dtype=jnp.float32,
+    single_tile: bool = False,
 ):
     """Grid (query_block, candidate_tile); candidate tiles are minor-most,
     so the running (E_max, block_q, k) top-k in VMEM scratch accumulates
     across the tiles of one query block and is flushed to the output block
     on the last tile.
 
-    Merge order = [running k | tile columns ascending]: running entries
-    hold globally-smaller candidate ids (earlier tiles) in tie-stable
-    order, so the first-minimum-position argmin resolves equal distances
-    to the lowest candidate id — exactly the slab kernel / lax.top_k tie
-    rule, which is what makes streaming bit-identical to slab.  Scratch
-    is seeded with +inf sentinels: strictly worse than every real
-    candidate (masked ones carry the finite _BIG), so a sentinel can only
-    surface in the degenerate k > Lc case the wrappers reject.
+    The running scratch is kept SORTED by (distance, arrival) as an
+    invariant: each tile is partial-sorted to its own top-k with the
+    k-pass selector (O(k*tile_c) VPU work); the FIRST tile's top-k seeds
+    the scratch directly (a merge against sentinels is an identity — and
+    with ``single_tile`` statically true, the whole scratch/merge/flush
+    machinery drops out of the program: the one-tile grid IS a direct
+    dense selection, the small-library fast case the calibrator
+    exploits); every later tile folds in with the O(k log k) merge
+    network — running entries (globally earlier sweep positions, i.e.
+    smaller candidate ids) win ties via the network's rank key, so equal
+    distances resolve to the lowest candidate id, exactly the lax.top_k
+    rule: bit-identical to the jnp builders and the dense oracle.
     """
     qi = pl.program_id(0)
     ci = pl.program_id(1)
-
-    @pl.when(ci == 0)
-    def _init():
-        idx_s[...] = jnp.zeros(idx_s.shape, jnp.int32)
-        dist_s[...] = jnp.full(dist_s.shape, jnp.inf, jnp.float32)
 
     base = ci * tile_c
     col_ids = base + jax.lax.broadcasted_iota(jnp.int32, (block_q, tile_c), 1)
@@ -298,20 +256,48 @@ def knn_topk_stream_kernel(
         )
         invalid = invalid | (col_ids == row_ids)
 
+    def _restore_inf(d):
+        # Masked candidates carry the finite _BIG inside the selection
+        # (the k-pass knockout needs +inf strictly above the mask value);
+        # the dense oracle reports them as +inf, so restore inf on the
+        # way out — only reachable in the degenerate k == Lc case where
+        # a masked self is selected.
+        return jnp.where(d >= _BIG, jnp.float32(jnp.inf), d)
+
     D = jnp.zeros((block_q, tile_c), dist_dtype)
+    t_is, t_ds = [], []
     for e in range(E_max):  # static unroll: E_max <= 20
         D = _acc_sq(D, vq_ref[e, :], vc_ref[e, :], dist_dtype)
         Dm = jnp.where(invalid, _BIG, D.astype(jnp.float32))
-        md = jnp.concatenate([dist_s[e], Dm], axis=1)
-        mi = jnp.concatenate([idx_s[e], col_ids], axis=1)
-        idxs, dists = _kpass_select(md, mi, k, k + tile_c)
-        idx_s[e] = idxs
-        dist_s[e] = dists
+        t_i, t_d = _kpass_select(Dm, base, k, tile_c)  # affine ids
+        if single_tile:
+            idx_ref[e] = t_i
+            dist_ref[e] = _restore_inf(t_d)
+        else:
+            t_is.append(t_i)
+            t_ds.append(t_d)
 
-    @pl.when(ci == pl.num_programs(1) - 1)
-    def _flush():
-        idx_ref[...] = idx_s[...]
-        dist_ref[...] = dist_s[...]
+    if not single_tile:
+        # One batched (E_max, block_q, k) seed/fold per tile — the merge
+        # network broadcasts over leading dims, so folding every E at
+        # once costs one network instead of E_max of them.
+        T_i, T_d = jnp.stack(t_is), jnp.stack(t_ds)
+
+        @pl.when(ci == 0)
+        def _seed():
+            idx_s[...] = T_i
+            dist_s[...] = T_d
+
+        @pl.when(ci != 0)
+        def _fold():
+            m_i, m_d = merge_topk_sorted(idx_s[...], dist_s[...], T_i, T_d, k)
+            idx_s[...] = m_i
+            dist_s[...] = m_d
+
+        @pl.when(ci == pl.num_programs(1) - 1)
+        def _flush():
+            idx_ref[...] = idx_s[...]
+            dist_ref[...] = _restore_inf(dist_s[...])
 
 
 def knn_topk_stream_pallas(
@@ -327,14 +313,22 @@ def knn_topk_stream_pallas(
     """Raw streaming pallas_call wrapper (padding via ops.knn_topk_streaming).
 
     VMEM per program is stream_vmem_bytes(...) — flat in Lc — so library
-    length is bounded by HBM, not by the 16 MB VMEM budget.
+    length is bounded by HBM, not by the 16 MB VMEM budget.  tile_c is
+    clamped up to an 8-aligned width >= k (the per-tile partial sort
+    needs k real columns available) and down to the padded library width
+    (a tile covering Lc is one direct selection — the small-library fast
+    case the calibrator exploits).
     """
     E_max = Vq.shape[0]
     Lc = Vc.shape[1]
     if k > Lc:
         raise ValueError(f"k={k} exceeds candidate count Lc={Lc}")
-    tile_c = max(8, min(tile_c, pl.cdiv(Lc, 8) * 8))
+    tile_c = max(-(-k // 8) * 8, min(tile_c, pl.cdiv(Lc, 8) * 8))
     n_c = pl.cdiv(Lc, tile_c)
+    # Balance tile widths under the cap (same tile count, 8-aligned
+    # ceil(Lc / n_c) width) so the grid pays O(8 * n_c) padded columns
+    # instead of a whole ragged tail tile.
+    tile_c = max(-(-k // 8) * 8, pl.cdiv(pl.cdiv(Lc, n_c), 8) * 8)
     Vc_p = jnp.pad(Vc, ((0, 0), (0, n_c * tile_c - Lc)))
 
     def call_split(Vq_p, row0, rows_pad, bq):
@@ -349,7 +343,14 @@ def knn_topk_stream_pallas(
             exclude_self=exclude_self,
             row0=row0,
             dist_dtype=dist_dtype,
+            single_tile=n_c == 1,
         )
+        # one-tile grids select directly into the outputs: no running
+        # top-k scratch to allocate or flush
+        scratch = [] if n_c == 1 else [
+            pltpu.VMEM(shapes["scratch_idx"], jnp.int32),
+            pltpu.VMEM(shapes["scratch_dist"], jnp.float32),
+        ]
         return pl.pallas_call(
             kernel,
             grid=(rows_pad // bq, n_c),
@@ -365,11 +366,214 @@ def knn_topk_stream_pallas(
                 jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.int32),
                 jax.ShapeDtypeStruct((E_max, rows_pad, k), jnp.float32),
             ],
-            scratch_shapes=[
-                pltpu.VMEM(shapes["scratch_idx"], jnp.int32),
-                pltpu.VMEM(shapes["scratch_dist"], jnp.float32),
-            ],
+            scratch_shapes=scratch,
             interpret=interpret,
         )(Vq_p, Vc_p)
 
     return _over_query_splits(Vq, block_q, call_split)
+
+
+# ------------------------------------------- prefix snapshots (DESIGN SS9)
+def prefix_block_shapes(
+    E_hi: int, nb: int, k: int, block_q: int, tile_c: int
+) -> dict[str, tuple[int, ...]]:
+    """Per-program block/scratch shapes of the prefix-snapshot kernel —
+    like ``stream_block_shapes``, a pure function of the static tile
+    parameters: neither the library length nor the NUMBER of library
+    sizes appears (the size count S only scales the output allocation
+    and the grid's boundary-tile count), so prefix snapshots inherit the
+    flat-VMEM guarantee."""
+    return {
+        "vq": (E_hi, block_q),
+        "vc_tile": (E_hi, tile_c),
+        "ids": (1, tile_c),
+        "out": (1, nb, block_q, k),
+        "scratch_idx": (nb, block_q, k),
+        "scratch_dist": (nb, block_q, k),
+        "tile_topk": (block_q, k),
+        "merge": (block_q, 2 * _next_pow2(k)),
+    }
+
+
+def knn_topk_prefix_kernel(
+    slot_ref,  # scalar-prefetch (n_tiles,) snapshot-slot table; consumed
+    # by the output index_map, unused in the body.
+    vq_ref,
+    vc_ref,
+    ids_ref,
+    idx_ref,
+    dist_ref,
+    idx_s,
+    dist_s,
+    *,
+    buckets: tuple[int, ...],
+    k: int,
+    block_q: int,
+    tile_c: int,
+    exclude_self: bool,
+    row0: int = 0,
+    dist_dtype=jnp.float32,
+):
+    """In-kernel prefix snapshots: the streaming running merge over
+    candidate tiles pre-clipped at library-size boundaries.
+
+    Candidates arrive pre-gathered in sweep order (the ``col_ids``
+    permutation already applied by the wrapper); ``ids_ref`` carries each
+    lane's ORIGINAL candidate id, -1 on the padding that fills clipped
+    segments up to ``tile_c`` (masked to _BIG like out-of-range columns,
+    so padding never enters a table — every prefix holds >= k real
+    candidates by the wrapper's validation).  Selection runs only at the
+    ``buckets`` dimensions into an (nb, block_q, k) sorted running
+    scratch.  Every program writes the carry to its snapshot slot's
+    output block; consecutive tiles of one slot revisit the same block
+    (one VMEM-resident write), and the LAST writer is the tile ending
+    exactly at the slot's library-size boundary — so each emitted slot
+    holds the prefix table, bit-identical to the one-sweep jnp builder
+    and the per-size rebuild oracle.
+    """
+    qi = pl.program_id(0)
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        idx_s[...] = jnp.zeros(idx_s.shape, jnp.int32)
+        dist_s[...] = jnp.full(dist_s.shape, jnp.inf, jnp.float32)
+
+    ids = jnp.broadcast_to(ids_ref[...], (block_q, tile_c))
+    invalid = ids < 0
+    if exclude_self:
+        row_ids = row0 + qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, tile_c), 0
+        )
+        invalid = invalid | (ids == row_ids)
+
+    want = set(buckets)
+    D = jnp.zeros((block_q, tile_c), dist_dtype)
+    t_is, t_ds = [], []
+    for e in range(buckets[-1]):  # static unroll: E <= 20
+        D = _acc_sq(D, vq_ref[e, :], vc_ref[e, :], dist_dtype)
+        if e + 1 not in want:
+            continue
+        Dm = jnp.where(invalid, _BIG, D.astype(jnp.float32))
+        t_i, t_d = _kpass_select(Dm, ids, k, tile_c)
+        t_is.append(t_i)
+        t_ds.append(t_d)
+    # One batched (nb, block_q, k) fold per tile (see the stream kernel):
+    # slot si merges with bucket si's tile selection; the first tile's
+    # merge against the inf-seeded scratch is an identity.
+    T_i, T_d = jnp.stack(t_is), jnp.stack(t_ds)
+    m_i, m_d = merge_topk_sorted(idx_s[...], dist_s[...], T_i, T_d, k)
+    idx_s[...] = m_i
+    dist_s[...] = m_d
+
+    idx_ref[0] = idx_s[...]
+    # Restore +inf on masked-selected entries (see the stream kernel's
+    # flush) so the carry matches the jnp builders bit-for-bit even in
+    # the degenerate k == prefix-size case.
+    d = dist_s[...]
+    dist_ref[0] = jnp.where(d >= _BIG, jnp.float32(jnp.inf), d)
+
+
+def knn_topk_prefix_pallas(
+    Vq: jax.Array,
+    Vc: jax.Array,
+    k: int,
+    exclude_self: bool,
+    buckets: tuple[int, ...],
+    lib_sizes: tuple[int, ...],
+    block_q: int = 128,
+    tile_c: int = 512,
+    interpret: bool = True,
+    dist_dtype=jnp.float32,
+    col_ids: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw prefix-snapshot pallas_call wrapper (DESIGN.md SS9).
+
+    Returns (idx, sq_dists), each (S, len(buckets), Lq, k) — the same
+    contract (and bit-identical output) as
+    core/knn.knn_tables_prefix_streaming / _rebuild.
+
+    The ragged clipped tiles of ``_prefix_tile_bounds`` (the SAME bounds
+    the jnp one-sweep builder uses) are made uniform for the Pallas grid
+    by a static gather plan: position j of padded tile t maps to sweep
+    position bounds[t].start + j (through the optional ``col_ids``
+    permutation) or to a masked -1 lane.  Each tile's snapshot SLOT (the
+    library size whose boundary closes the tile's segment) rides in as a
+    scalar-prefetch vector the output index_map indexes (index maps may
+    not capture array constants), so no dynamic stores are needed.
+    """
+    from repro.core import knn as core_knn
+
+    E_rows, Lq = Vq.shape
+    Lc = Vc.shape[1]
+    core_knn._check_prefix_args(
+        Lq, Lc, k, exclude_self, buckets, lib_sizes, E_rows, col_ids
+    )
+    E_hi = buckets[-1]
+    nb = len(buckets)
+    S = len(lib_sizes)
+    need = k + 1 if exclude_self else k
+    tile_c = -(-max(tile_c, need) // 8) * 8
+    bounds = core_knn._prefix_tile_bounds(lib_sizes, tile_c)
+    n_tiles = len(bounds)
+
+    pos = np.zeros((n_tiles, tile_c), np.int32)
+    valid = np.zeros((n_tiles, tile_c), bool)
+    slots = np.zeros((n_tiles,), np.int32)
+    for t, (start, stop) in enumerate(bounds):
+        w = stop - start
+        pos[t, :w] = np.arange(start, stop, dtype=np.int32)
+        valid[t, :w] = True
+        slots[t] = bisect.bisect_left(lib_sizes, stop)
+    posj = jnp.asarray(pos)
+    validj = jnp.asarray(valid)
+    if col_ids is None:
+        ids_val = posj
+    else:
+        ids_val = jnp.take(col_ids.astype(jnp.int32), posj)
+    ids = jnp.where(validj, ids_val, -1)
+    gather = jnp.where(validj, ids_val, 0).reshape(-1)
+    Vc_g = jnp.take(Vc[:E_hi], gather, axis=1)  # (E_hi, n_tiles * tile_c)
+    slot_arr = jnp.asarray(slots)
+
+    def call_split(Vq_p, row0, rows_pad, bq):
+        shapes = prefix_block_shapes(E_hi, nb, k, bq, tile_c)
+        kernel = functools.partial(
+            knn_topk_prefix_kernel,
+            buckets=tuple(buckets),
+            k=k,
+            block_q=bq,
+            tile_c=tile_c,
+            exclude_self=exclude_self,
+            row0=row0,
+            dist_dtype=dist_dtype,
+        )
+        out_spec = pl.BlockSpec(
+            shapes["out"], lambda i, j, slots: (slots[j], 0, i, 0)
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(rows_pad // bq, n_tiles),
+                in_specs=[
+                    pl.BlockSpec(shapes["vq"], lambda i, j, slots: (0, i)),
+                    pl.BlockSpec(
+                        shapes["vc_tile"], lambda i, j, slots: (0, j)
+                    ),
+                    pl.BlockSpec(shapes["ids"], lambda i, j, slots: (j, 0)),
+                ],
+                out_specs=[out_spec, out_spec],
+                scratch_shapes=[
+                    pltpu.VMEM(shapes["scratch_idx"], jnp.int32),
+                    pltpu.VMEM(shapes["scratch_dist"], jnp.float32),
+                ],
+            ),
+            out_shape=[
+                jax.ShapeDtypeStruct((S, nb, rows_pad, k), jnp.int32),
+                jax.ShapeDtypeStruct((S, nb, rows_pad, k), jnp.float32),
+            ],
+            interpret=interpret,
+        )(slot_arr, Vq_p, Vc_g, ids)
+
+    return _over_query_splits(Vq[:E_hi], block_q, call_split, q_axis=2)

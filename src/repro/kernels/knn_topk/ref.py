@@ -51,10 +51,11 @@ def knn_topk_stream_ref(
     tile_c: int = 64,
 ) -> tuple[jax.Array, jax.Array]:
     """Oracle for the STREAMING kernel: the core candidate-tiled builder
-    (core/knn.py), which carries the same running-top-k merge in a
-    lax.scan and is itself bit-identical to the slab builders — so the
-    streaming kernel is checked against an independently-tiled
-    implementation, not a copy of its own merge."""
+    (core/knn.py), which carries the same running sorted-merge in a
+    lax.scan and is itself bit-identical to the dense lax.top_k oracle
+    (:func:`knn_topk_ref`) — so the streaming kernel is checked against
+    an independently-tiled implementation, not a copy of its own
+    merge."""
     from repro.core import knn
 
     return knn.knn_tables_all_E_streaming(

@@ -65,7 +65,7 @@ def optimized_cfg(cfg, cell):
         if cfg.n_heads % 16 != 0 and cell.kind == "prefill":
             kw["attn_seq_shard"] = True
     if cfg.ssm_state > 0 and cell.kind == "train":
-        kw["ssm_chunk"] = 64  # halves the SSD decay-slab footprint
+        kw["ssm_chunk"] = 64  # halves the SSD decay-matrix footprint
     if cell.kind == "prefill":
         kw["prefill_last_only"] = True
     return dataclasses.replace(cfg, **kw)

@@ -3,9 +3,10 @@ production mesh at the paper's dataset scales (Table I), ShapeDtypeStruct
 only.
 
 Cost extrapolation (cost_analysis counts loop bodies once):
-the chunk function has two sequential loops — the scan over embedding
-dimensions E (knn_tables_all_E) and the lax.map over target blocks
-(ccm_library_row).  Cost is affine:  c(E, t) = b + E*e + t*l.
+the chunk function has two sequential loops — the per-tile unrolled loop
+over embedding dimensions E (knn_tables_all_E_streaming) and the lax.map
+over target blocks (ccm_library_row).  Cost is affine:
+c(E, t) = b + E*e + t*l.
 Three compiles at (E,t) = (1,1), (2,1), (2,2) identify e, l, b; the full
 cell is b + E_max*e + n_tb*l.
 """

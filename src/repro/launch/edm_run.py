@@ -156,10 +156,10 @@ def main():
     )
     ap.add_argument(
         "--knn-tile", type=int, default=0,
-        help="kNN selection layout (DESIGN.md SS8): 0 = auto (slab below "
-        "the threshold, streaming above), > 0 = streaming candidate tiles "
-        "of this width (distance working set flat in library length), "
-        "-1 = force the slab path; output is bit-identical either way",
+        help="streaming kNN candidate-tile width (DESIGN.md SS8): 0 = "
+        "auto-calibrated (widest tile under the VMEM budget), > 0 = force "
+        "this width (distance working set flat in library length); output "
+        "is bit-identical at every width",
     )
     ap.add_argument(
         "--no-bucketed", action="store_true",

@@ -148,8 +148,8 @@ def _sdpa_dense(q, k, v, causal: bool, q_pos=None):
 def _sdpa_chunked(q, k, v, causal: bool, q_pos=None, chunk: int = 1024,
                   unroll: bool = False, seq_shard: bool = False):
     """Query-chunked attention ("flash-in-XLA", SSPerf hillclimb #1): the
-    (Sq, Sk) score matrix is never materialized — one (chunk, Sk) slab per
-    step.  In `unroll` mode (python loop; also what the dry-run cost
+    (Sq, Sk) score matrix is never materialized — one (chunk, Sk) strip
+    per step.  In `unroll` mode (python loop; also what the dry-run cost
     extrapolation lowers) causal chunks additionally SLICE the key range to
     the causal frontier, halving attention FLOPs exactly.
 

@@ -69,7 +69,7 @@ def test_improved_ccm_equals_naive(small_network):
     x = ts[0]
     Lp = cfg.n_points(x.shape[0])
     V = lag_matrix(x, cfg.E_max, cfg.tau, Lp)
-    idx_all, sqd_all = knn.knn_tables_all_E(V, V, cfg.k_max, exclude_self=True)
+    idx_all, sqd_all = knn.knn_tables_dense(V, V, cfg.k_max, exclude_self=True)
     for E in (1, 3, 6):
         idx_s, sqd_s = knn.knn_table_single_E(V, V, E, E + 1, exclude_self=True)
         np.testing.assert_array_equal(

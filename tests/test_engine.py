@@ -96,8 +96,8 @@ def test_bucketed_tables_match_all_E_rows():
     rng = np.random.default_rng(2)
     V = jnp.asarray(rng.standard_normal((8, 140)), jnp.float32)
     buckets = (2, 5, 8)
-    idx_b, sqd_b = knn.knn_tables_bucketed(V, V, 9, True, buckets)
-    idx_a, sqd_a = knn.knn_tables_all_E(V, V, 9, True, impl="unroll")
+    idx_b, sqd_b = knn.knn_tables_bucketed_dense(V, V, 9, True, buckets)
+    idx_a, sqd_a = knn.knn_tables_dense(V, V, 9, True, impl="unroll")
     assert idx_b.shape == (3, 140, 9)
     for b, E in enumerate(buckets):
         np.testing.assert_array_equal(np.asarray(idx_b[b]), np.asarray(idx_a[E - 1]))
@@ -108,12 +108,12 @@ def test_bucketed_tables_match_all_E_rows():
 
 def test_bucketed_rebuild_impl_matches_all_E_rebuild():
     """cfg.knn_impl='rebuild' must reach the bucketed builder too (matmul
-    -form distances per bucket), matching knn_tables_all_E's rebuild rows."""
+    -form distances per bucket), matching knn_tables_dense's rebuild rows."""
     rng = np.random.default_rng(4)
     V = jnp.asarray(rng.standard_normal((8, 120)), jnp.float32)
     buckets = (3, 6)
-    idx_b, sqd_b = knn.knn_tables_bucketed(V, V, 7, True, buckets, impl="rebuild")
-    idx_a, sqd_a = knn.knn_tables_all_E(V, V, 7, True, impl="rebuild")
+    idx_b, sqd_b = knn.knn_tables_bucketed_dense(V, V, 7, True, buckets, impl="rebuild")
+    idx_a, sqd_a = knn.knn_tables_dense(V, V, 7, True, impl="rebuild")
     for b, E in enumerate(buckets):
         np.testing.assert_array_equal(np.asarray(idx_b[b]), np.asarray(idx_a[E - 1]))
         np.testing.assert_allclose(
@@ -166,7 +166,7 @@ def test_ccm_lookup_kernel_crosschecks_simplex_forecast():
 
     rng = np.random.default_rng(5)
     V = jnp.asarray(rng.standard_normal((5, 120)), jnp.float32)
-    idx, sqd = knn.knn_tables_all_E(V, V, 6, True)
+    idx, sqd = knn.knn_tables_dense(V, V, 6, True)
     idx, w = knn.tables_with_weights(idx, sqd)
     Y = jnp.asarray(rng.standard_normal((9, 120)), jnp.float32)
     got = np.asarray(ccm_lookup(idx[3], w[3], Y, block_b=4, block_t=64))

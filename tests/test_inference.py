@@ -84,7 +84,7 @@ def test_prefix_full_size_row_equals_bucketed_tables(lag_pair):
     pi, pd = knn.knn_tables_prefix_streaming(
         Vq, Vq, 7, True, (1, 3, 6), (30, 120), 64
     )
-    bi, bd = knn.knn_tables_bucketed(Vq, Vq, 7, True, (1, 3, 6))
+    bi, bd = knn.knn_tables_bucketed_dense(Vq, Vq, 7, True, (1, 3, 6))
     np.testing.assert_array_equal(np.asarray(pi[-1]), np.asarray(bi))
     np.testing.assert_array_equal(np.asarray(pd[-1]), np.asarray(bd))
 

@@ -9,46 +9,25 @@ import pytest
 
 from repro.kernels.ccm_lookup.ops import ccm_lookup
 from repro.kernels.ccm_lookup.ref import ccm_lookup_ref
-from repro.kernels.knn_topk.ops import knn_topk
+from repro.kernels.knn_topk.ops import knn_topk_streaming
 from repro.kernels.knn_topk.ref import knn_topk_ref
-
-
-@pytest.mark.parametrize(
-    "E_max,Lq,Lc,k,exclude_self",
-    [
-        (1, 64, 64, 2, False),
-        (4, 100, 100, 5, True),
-        (6, 200, 150, 7, False),
-        (3, 129, 257, 4, False),  # non-multiple of block sizes
-        (8, 50, 300, 9, False),
-        (20, 130, 130, 21, True),  # paper-scale E_max and k
-    ],
-)
-def test_knn_topk_vs_oracle(E_max, Lq, Lc, k, exclude_self):
-    rng = np.random.default_rng(E_max * 1000 + Lq)
-    Vq = jnp.asarray(rng.standard_normal((E_max, Lq)), jnp.float32)
-    Vc = Vq if exclude_self else jnp.asarray(
-        rng.standard_normal((E_max, Lc)), jnp.float32
-    )
-    idx, d = knn_topk(Vq, Vc, k, exclude_self=exclude_self, block_q=64)
-    ridx, rd = knn_topk_ref(Vq, Vc, k, exclude_self)
-    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
-    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize(
     "E_max,Lq,Lc,k,exclude_self,tile_c",
     [
+        (1, 64, 64, 2, False, 32),
         (4, 100, 100, 5, True, 48),
         (6, 200, 150, 7, False, 64),
+        (3, 129, 257, 4, False, 96),  # non-multiple of block/tile sizes
+        (8, 50, 300, 9, False, 512),  # tile wider than the library
         (20, 130, 130, 21, True, 64),  # paper-scale E_max and k
     ],
 )
 def test_knn_topk_streaming_vs_oracle(E_max, Lq, Lc, k, exclude_self, tile_c):
     """The streaming (candidate-tiled, Lc-independent VMEM) kernel against
-    the slab oracle; full tie/merge coverage is in test_knn_streaming.py."""
-    from repro.kernels.knn_topk.ops import knn_topk_streaming
-
+    the dense lax.top_k oracle — bit-identical indices at every tile
+    width; full tie/merge coverage is in test_knn_streaming.py."""
     rng = np.random.default_rng(E_max * 1000 + Lq)
     Vq = jnp.asarray(rng.standard_normal((E_max, Lq)), jnp.float32)
     Vc = Vq if exclude_self else jnp.asarray(
@@ -65,7 +44,7 @@ def test_knn_topk_streaming_vs_oracle(E_max, Lq, Lc, k, exclude_self, tile_c):
 def test_knn_topk_sorted_and_self_excluded():
     rng = np.random.default_rng(7)
     V = jnp.asarray(rng.standard_normal((4, 90)), jnp.float32)
-    idx, d = knn_topk(V, V, 5, exclude_self=True)
+    idx, d = knn_topk_streaming(V, V, 5, exclude_self=True, tile_c=32)
     d = np.asarray(d)
     idx = np.asarray(idx)
     assert np.all(np.diff(d, axis=-1) >= -1e-6)  # ascending distances
@@ -142,13 +121,14 @@ def test_flash_attn_matches_model_sdpa():
 
 
 def test_knn_impl_variants_agree():
-    """scan / unroll / blocked:g produce identical tables (SSPerf HC3)."""
-    from repro.core.knn import knn_tables_all_E
+    """scan / unroll / blocked:g dense-oracle variants produce identical
+    tables (SSPerf HC3)."""
+    from repro.core.knn import knn_tables_dense
 
     rng = np.random.default_rng(3)
     V = jnp.asarray(rng.standard_normal((8, 150)), jnp.float32)
-    i0, d0 = knn_tables_all_E(V, V, 9, True, impl="scan")
+    i0, d0 = knn_tables_dense(V, V, 9, True, impl="scan")
     for impl in ("unroll", "blocked:4", "blocked:2"):
-        i1, d1 = knn_tables_all_E(V, V, 9, True, impl=impl)
+        i1, d1 = knn_tables_dense(V, V, 9, True, impl=impl)
         np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
         np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-6, atol=1e-8)

@@ -55,7 +55,7 @@ def test_simplex_weights_are_a_distribution(seed):
 @given(st.integers(0, 10_000))
 @settings(max_examples=10, deadline=None)
 def test_knn_topk_property(seed):
-    from repro.kernels.knn_topk.ops import knn_topk
+    from repro.kernels.knn_topk.ops import knn_topk_streaming
     from repro.kernels.knn_topk.ref import knn_topk_ref
 
     rng = np.random.default_rng(seed)
@@ -63,12 +63,13 @@ def test_knn_topk_property(seed):
     Lq = int(rng.integers(16, 150))
     Lc = int(rng.integers(E_max + 3, 150))
     k = int(rng.integers(1, min(8, Lc - 1)))
+    tile_c = int(rng.integers(8, 150))
     Vq = jnp.asarray(rng.standard_normal((E_max, Lq)), jnp.float32)
     Vc = jnp.asarray(rng.standard_normal((E_max, Lc)), jnp.float32)
-    idx, d = knn_topk(Vq, Vc, k, block_q=32)
+    idx, d = knn_topk_streaming(Vq, Vc, k, block_q=32, tile_c=tile_c)
     ridx, rd = knn_topk_ref(Vq, Vc, k, False)
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
-    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(rd))
 
 
 # ------------------------------------------------------------- optimization
