@@ -803,7 +803,8 @@ def _dig(d: dict, path: tuple[str, ...]) -> float:
     return float(d)
 
 
-def _knn_stream_gate(base: dict, fresh: dict, floor: dict) -> bool:
+def _knn_stream_gate(base: dict, fresh: dict, floor: dict,
+                     summary: list | None = None) -> bool:
     """The knn-gate (DESIGN.md SS8): fresh streaming build time must beat
     the slab baseline at every benched Lc on both engines — both the
     slab timed fresh in the same run (same-machine, noise-free yardstick)
@@ -827,6 +828,13 @@ def _knn_stream_gate(base: dict, fresh: dict, floor: dict) -> bool:
             )
             verdict = "OK" if f <= limit else "STREAM_SLOWER_THAN_SLAB"
             ok = ok and verdict == "OK"
+            if summary is not None:
+                summary.append({
+                    "gate": key, "bench": "knn", "kind": "knn-stream",
+                    "fresh_s": f, "slab_fresh_s": slab_fresh,
+                    "slab_base_s": slab_base, "limit_s": limit,
+                    "verdict": verdict,
+                })
             print(
                 f"gate,{key},stream={f:.3f}s;slab_fresh={slab_fresh:.3f}s;"
                 f"slab_base={slab_base:.3f}s;{verdict}"
@@ -834,13 +842,15 @@ def _knn_stream_gate(base: dict, fresh: dict, floor: dict) -> bool:
     return ok
 
 
-def check_regressions(names: list[str], floor: dict | None = None) -> list[str]:
+def check_regressions(names: list[str], floor: dict | None = None,
+                      summary: list | None = None) -> list[str]:
     """Compare fresh BENCH_DIR timings against committed repo-root
     baselines; print one verdict row per gated field and return the
     bench names with violations (>SLOWDOWN_LIMIT x).  ``floor`` carries
     the best fresh timing seen so far per field across retry passes —
     shared-runner wall clocks are noisy, so a field only regresses if
-    its BEST observation is slow."""
+    its BEST observation is slow.  ``summary`` (when given) collects one
+    machine-readable entry per gate row for CHECK_summary.json."""
     bad: list[str] = []
     floor = {} if floor is None else floor
     for name in names:
@@ -862,11 +872,18 @@ def check_regressions(names: list[str], floor: dict | None = None) -> list[str]:
             verdict = "OK" if ratio <= SLOWDOWN_LIMIT else "REGRESSION"
             if verdict != "OK" and name not in bad:
                 bad.append(name)
+            if summary is not None:
+                summary.append({
+                    "gate": key, "bench": name, "kind": "drift",
+                    "base_s": b, "fresh_s": f, "ratio": ratio,
+                    "verdict": verdict,
+                })
             print(
                 f"gate,{key},"
                 f"base={b:.3f}s;fresh={f:.3f}s;ratio={ratio:.2f}x;{verdict}"
             )
-        if name == "knn" and not _knn_stream_gate(base, fresh, floor):
+        if name == "knn" and not _knn_stream_gate(base, fresh, floor,
+                                                 summary):
             if name not in bad:
                 bad.append(name)
     return bad
@@ -889,19 +906,40 @@ def main() -> None:
         if not gated:
             sys.exit(f"--check needs at least one gated bench: {list(GATES)}")
         BENCH_DIR = RESULTS / "fresh"  # keep committed baselines untouched
+        # Clear THIS run's gated artifacts up front: a stale fresh JSON
+        # from an aborted earlier run must never shadow the bench we are
+        # about to (re)run — the gate would silently compare old numbers.
+        for name in gated:
+            stale = BENCH_DIR / GATES[name][0]
+            if stale.exists():
+                stale.unlink()
+        (BENCH_DIR / "CHECK_summary.json").unlink(missing_ok=True)
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name]()
     if check:
         floor: dict = {}
-        bad = check_regressions(names, floor)
+        summary: list = []
+        bad = check_regressions(names, floor, summary)
         if bad:
             # One retry of only the offending benches: transient runner
             # noise clears (best-of-2 per field), real regressions persist.
             print(f"gate,retry,rerunning_{'+'.join(bad)}_once")
             for name in bad:
                 BENCHES[name]()
-            bad = check_regressions(bad, floor)
+            summary = [e for e in summary if e["bench"] not in bad]
+            bad = check_regressions(bad, floor, summary)
+        # Machine-readable per-bench delta summary, uploaded with the
+        # fresh JSONs so a regression (or a promotable speedup) can be
+        # triaged from the artifact alone.
+        (BENCH_DIR / "CHECK_summary.json").write_text(json.dumps({
+            "slowdown_limit": SLOWDOWN_LIMIT,
+            "knn_stream_margin": KNN_STREAM_MARGIN,
+            "benches": names,
+            "gates": summary,
+            "failed": bad,
+            "passed": not bad,
+        }, indent=1))
         if bad:
             sys.exit(
                 f"bench regression gate FAILED: {bad} slower than "

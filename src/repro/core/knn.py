@@ -146,9 +146,32 @@ def resolve_stream_tile(Lc: int, cfg, profile: str = "vmem") -> int:
         if profile == "host"
         else (KNN_TILE_BUDGET_BYTES, KNN_TILE_MAX)
     )
-    return calibrate_knn_tile(
+    tile = calibrate_knn_tile(
         Lc, E_max=cfg.E_max, k=cfg.k_max, dist_dtype=cfg.dist_dtype,
         budget_bytes=budget, tile_max=tile_max,
+    )
+    _emit_calibration(Lc, tile, profile, cfg)
+    return tile
+
+
+# Calibration results are pure shape arithmetic — emit each distinct
+# (Lc, tile, profile) once per process, not once per chunk.
+_calibration_seen: set = set()
+
+
+def _emit_calibration(Lc: int, tile: int, profile: str, cfg) -> None:
+    from repro.runtime import telemetry  # lazy: knn is a leaf module
+
+    if not telemetry.enabled():
+        return
+    key = (Lc, tile, profile)
+    if key in _calibration_seen:
+        return
+    _calibration_seen.add(key)
+    telemetry.counter(
+        "engine", "knn_tile", float(tile), Lc=Lc, profile=profile,
+        working_set_bytes=streaming_bytes(128, cfg.k_max, tile, cfg.E_max,
+                                          cfg.dist_dtype),
     )
 
 

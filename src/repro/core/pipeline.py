@@ -34,6 +34,7 @@ decomposition is optimal.
 from __future__ import annotations
 
 import functools
+from time import perf_counter as _perf
 from typing import Optional
 
 import jax
@@ -45,6 +46,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import ccm, knn, simplex
 from repro.core.types import CausalMap, EDMConfig
 from repro.data.store import TileWriter
+from repro.runtime import telemetry
 from repro.runtime.stream import ChunkStreamer
 
 
@@ -296,10 +298,16 @@ def _phase2_untiled(
         if progress:
             print(f"ccm rows {row0}..{row0 + valid} / {N}")
 
-    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+    with ChunkStreamer(drain, depth=cfg.stream_depth,
+                       stage="phase2") as streamer:
         for row0, valid in chunk_plan:
-            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
-            streamer.submit((row0, valid), dispatch(rows))
+            with telemetry.span("phase2", "chunk", row0=row0,
+                                rows=valid, tiled=False) as t:
+                with telemetry.span("phase2", "device_put", row0=row0):
+                    rows = jnp.asarray(_pad_rows(ts[row0 : row0 + chunk], chunk))
+                dev = dispatch(rows)
+                t["chunk_rows"] = chunk
+            streamer.submit((row0, valid), dev)
 
 
 def _phase2_tiled(
@@ -342,24 +350,30 @@ def _phase2_tiled(
         if progress and last_tile:
             print(f"ccm rows {row0}..{row0 + valid} / {N} (tiles of {T})")
 
-    with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+    with ChunkStreamer(drain, depth=cfg.stream_depth,
+                       stage="phase2") as streamer:
         for row0, valid in chunk_plan:
-            rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
-            idx, w = tables_fn(jnp.asarray(rows))  # once per chunk
-            for c0, seg_plan in tile_plans:
-                c1 = min(c0 + T, N)
-                # per-tile slice only — a gather through `order` in the
-                # bucketed layout, so NO second (N, Lp) sorted host copy
-                fut_tile = jnp.asarray(
-                    ts_fut[order[c0:c1]] if order is not None else ts_fut[c0:c1]
-                )
-                if seg_plan is not None:
-                    block = tile_fn_for(seg_plan)(idx, w, fut_tile)
-                else:
-                    block = tile_fn(
-                        idx, w, fut_tile, jnp.asarray(e_idx_host[c0:c1])
+            with telemetry.span("phase2", "chunk", row0=row0, rows=valid,
+                                tiled=True, tile=T,
+                                n_tiles=len(tile_plans)) as t:
+                with telemetry.span("phase2", "device_put", row0=row0):
+                    rows = jnp.asarray(_pad_rows(ts[row0 : row0 + chunk], chunk))
+                idx, w = tables_fn(rows)  # once per chunk
+                for c0, seg_plan in tile_plans:
+                    c1 = min(c0 + T, N)
+                    # per-tile slice only — a gather through `order` in the
+                    # bucketed layout, so NO second (N, Lp) sorted host copy
+                    fut_tile = jnp.asarray(
+                        ts_fut[order[c0:c1]] if order is not None else ts_fut[c0:c1]
                     )
-                streamer.submit((row0, c0, valid), block)
+                    if seg_plan is not None:
+                        block = tile_fn_for(seg_plan)(idx, w, fut_tile)
+                    else:
+                        block = tile_fn(
+                            idx, w, fut_tile, jnp.asarray(e_idx_host[c0:c1])
+                        )
+                    streamer.submit((row0, c0, valid), block)
+                t["chunk_rows"] = chunk
     if writer is not None:
         writer.commit()  # defensive: deferred entries are never left behind
 
@@ -380,13 +394,20 @@ def run_phase1(
     chunk = mesh.size * cfg.lib_block
     simplex_fn = make_simplex_fn(mesh, cfg)
     rhos_parts, optE_parts = [], []
+    cache0 = telemetry.compile_cache_entries()
     for row0 in range(0, N, chunk):
         if on_chunk is not None:
             on_chunk(row0)
-        rows = _pad_rows(ts[row0 : row0 + chunk], chunk)
-        rhos_c, optE_c = simplex_fn(jnp.asarray(rows))
-        rhos_parts.append(np.asarray(rhos_c))
-        optE_parts.append(np.asarray(optE_c))
+        with telemetry.span("phase1", "chunk", row0=row0,
+                            chunk_rows=chunk) as t:
+            with telemetry.span("phase1", "device_put", row0=row0):
+                rows = jnp.asarray(_pad_rows(ts[row0 : row0 + chunk], chunk))
+            rhos_c, optE_c = simplex_fn(rows)
+            t0 = _perf()
+            rhos_parts.append(np.asarray(rhos_c))
+            optE_parts.append(np.asarray(optE_c))
+            t["gather_s"] = _perf() - t0
+    telemetry.emit_compile_cache("phase1", cache0)
     simplex_rhos = np.concatenate(rhos_parts)[:N]
     optE = np.concatenate(optE_parts)[:N].astype(np.int32)
     return simplex_rhos, optE
@@ -414,7 +435,9 @@ def run_phase2_chunks(
     """
     chunk = mesh.size * cfg.lib_block
     phase2 = _phase2_tiled if cfg.target_tile else _phase2_untiled
+    cache0 = telemetry.compile_cache_entries()
     phase2(ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress)
+    telemetry.emit_compile_cache("phase2", cache0)
 
 
 def run_causal_inference(
@@ -456,7 +479,8 @@ def run_causal_inference(
     )
 
     if writer is not None:
-        rho = writer.assemble(
-            mmap_path=writer.dir / "causal_map" / "data.npy"
-        )
+        with telemetry.span("assemble", "causal_map", N=N):
+            rho = writer.assemble(
+                mmap_path=writer.dir / "causal_map" / "data.npy"
+            )
     return CausalMap(rho=rho, optE=optE, simplex_rho=simplex_rhos)

@@ -9,8 +9,15 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import time
 
 import numpy as np
+
+# telemetry imports NOTHING from the store at module scope (its JSONL
+# sink borrows atomic_write_text lazily inside flush), so this edge is
+# acyclic: the store emits write/fsync spans, the sink persists them
+# with the store's own durability primitive.
+from repro.runtime import telemetry
 
 
 def _fsync_dir(path: pathlib.Path) -> None:
@@ -49,17 +56,22 @@ def atomic_write_text(path: str | pathlib.Path, text: str) -> None:
     _fsync_dir(path.parent)
 
 
-def atomic_save_npy(path: pathlib.Path, arr: np.ndarray) -> None:
+def atomic_save_npy(path: pathlib.Path, arr: np.ndarray) -> dict:
     """Atomic np.save — the shared-store write primitive: concurrent
     duplicate writers (lease-steal races) replace each other with
-    identical bytes instead of interleaving."""
+    identical bytes instead of interleaving.  Returns write stats
+    ({bytes, fsync_s}) so instrumented callers (TileWriter) can emit
+    them without re-measuring."""
     tmp = _unique_tmp(path)
     with open(tmp, "wb") as f:
         np.save(f, arr)
         f.flush()
+        t0 = time.perf_counter()
         os.fsync(f.fileno())
+        fsync_s = time.perf_counter() - t0
     os.replace(tmp, path)
     _fsync_dir(path.parent)
+    return {"bytes": int(arr.nbytes), "fsync_s": fsync_s}
 
 
 def save_meta(
@@ -138,11 +150,15 @@ class TileWriter:
         N: int,
         M: int | None = None,
         writer_id: str | None = None,
+        stage: str = "store",
     ):
         self.dir = pathlib.Path(path)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.N = N
         self.M = N if M is None else M
+        # Telemetry label only (never touches bytes): which pipeline
+        # stage this writer's tiles belong to ("phase2", "sig", …).
+        self.stage = stage
         if writer_id is not None and not writer_id.isidentifier():
             raise ValueError(f"writer_id={writer_id!r} must be identifier-like")
         self.writer_id = writer_id
@@ -270,7 +286,9 @@ class TileWriter:
         # Only THIS writer's entries go to its shard; merged `done` stays
         # a read-side view (rewriting it here would cross-duplicate other
         # workers' entries into this shard).
-        atomic_write_text(self.manifest, json.dumps(self._own))
+        with telemetry.span(self.stage, "manifest_commit",
+                            entries=len(self._own)):
+            atomic_write_text(self.manifest, json.dumps(self._own))
 
     def ensure_col_order(self, order: np.ndarray | None) -> None:
         """Declare (and persist) the on-disk column permutation for tile
@@ -306,7 +324,9 @@ class TileWriter:
     def write_block(self, row0: int, rho_rows: np.ndarray):
         """Full-width row block (legacy single-tile path)."""
         rho_rows = rho_rows[: max(0, self.N - row0)]
-        atomic_save_npy(self.dir / f"rows_{row0:08d}.npy", rho_rows)
+        with telemetry.span(self.stage, "write_block", row0=row0) as t:
+            t.update(atomic_save_npy(self.dir / f"rows_{row0:08d}.npy",
+                                     rho_rows))
         self.done[str(row0)] = self._own[str(row0)] = int(rho_rows.shape[0])
         self._commit()
 
@@ -322,7 +342,11 @@ class TileWriter:
         merely recomputed on resume (the .npy itself is durable before
         the manifest ever mentions it)."""
         block = block[: max(0, self.N - row0), : max(0, self.M - col0)]
-        atomic_save_npy(self.dir / f"tile_{row0:08d}_{col0:08d}.npy", block)
+        with telemetry.span(self.stage, "write_tile", row0=row0,
+                            col0=col0) as t:
+            t.update(atomic_save_npy(
+                self.dir / f"tile_{row0:08d}_{col0:08d}.npy", block
+            ))
         entry = [int(block.shape[0]), int(block.shape[1])]
         self.done[f"{row0},{col0}"] = self._own[f"{row0},{col0}"] = entry
         if commit:

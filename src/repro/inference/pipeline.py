@@ -49,6 +49,7 @@ from repro.data import store
 from repro.data.store import TileWriter
 from repro.inference import convergence, significance, surrogates
 from repro.inference.types import SignificanceConfig, SignificanceResult
+from repro.runtime import telemetry
 from repro.runtime.stream import ChunkStreamer
 
 
@@ -197,56 +198,70 @@ class SignificanceChunkRunner:
         """
         N, T, m, sig, cfg = self.N, self.T, self.m, self.sig, self.cfg
         order, ts, ts_fut = self.order, self.ts, self.ts_fut
-        with ChunkStreamer(drain, depth=cfg.stream_depth) as streamer:
+        cache0 = telemetry.compile_cache_entries()
+        with ChunkStreamer(drain, depth=cfg.stream_depth,
+                           stage="sig") as streamer:
             for row0, valid in plan_chunks:
                 if on_chunk is not None:
                     on_chunk(row0)
-                rows = _pad_rows(ts[row0 : row0 + self.chunk], self.chunk)
-                rows_j = jnp.asarray(rows)
-                rho_chunk = (
-                    np.asarray(rho[row0 : row0 + valid])
-                    if self.do_null else None
-                )
-                if self.do_conv:
-                    cidx, cw = self.conv_tables_fn(rows_j, self.col_ids)
-                if self.do_null:
-                    fidx, fw = self.full_tables_fn(rows_j)
-                for c0, seg_plan in self.tile_plans:
-                    c1 = min(c0 + T, N)
-                    orig = order[c0:c1]
+                with telemetry.span(
+                    "sig", "chunk", row0=row0, rows=valid,
+                    chunk_rows=self.chunk, tile=T,
+                    conv=self.do_conv, null=self.do_null,
+                ):
+                    with telemetry.span("sig", "device_put", row0=row0):
+                        rows = _pad_rows(
+                            ts[row0 : row0 + self.chunk], self.chunk
+                        )
+                        rows_j = jnp.asarray(rows)
+                    rho_chunk = (
+                        np.asarray(rho[row0 : row0 + valid])
+                        if self.do_null else None
+                    )
                     if self.do_conv:
-                        fut_tile = jnp.asarray(ts_fut[orig])
-                        streamer.submit(
-                            ("conv", row0, c0, valid),
-                            self.conv_tile_for(seg_plan)(cidx, cw, fut_tile),
-                        )
+                        cidx, cw = self.conv_tables_fn(rows_j, self.col_ids)
                     if self.do_null:
-                        # Regenerated per (chunk, tile) like _phase2_tiled's
-                        # fut_tile upload: keeping every tile's (t*m, Lp)
-                        # surrogate batch resident would defeat the tiling
-                        # at scale, and the per-tile FFT is dominated by
-                        # the m x lookup work the tile triggers anyway.
-                        fut_surr = surrogates.surrogate_futures(
-                            self.surr_key, jnp.asarray(ts[orig]),
-                            jnp.asarray(orig.astype(np.int32)),
-                            n=m, kind=sig.surrogate, cfg=cfg,
-                        )
-                        rho_obs = jnp.asarray(
-                            _pad_rows(rho_chunk[:, orig], self.chunk)
-                        )
-                        streamer.submit(
-                            ("pval", row0, c0, valid),
-                            self.null_tile_for(seg_plan)(
-                                fidx, fw, fut_surr, rho_obs
-                            ),
-                        )
+                        fidx, fw = self.full_tables_fn(rows_j)
+                    for c0, seg_plan in self.tile_plans:
+                        c1 = min(c0 + T, N)
+                        orig = order[c0:c1]
+                        if self.do_conv:
+                            fut_tile = jnp.asarray(ts_fut[orig])
+                            streamer.submit(
+                                ("conv", row0, c0, valid),
+                                self.conv_tile_for(seg_plan)(
+                                    cidx, cw, fut_tile
+                                ),
+                            )
+                        if self.do_null:
+                            # Regenerated per (chunk, tile) like
+                            # _phase2_tiled's fut_tile upload: keeping every
+                            # tile's (t*m, Lp) surrogate batch resident would
+                            # defeat the tiling at scale, and the per-tile
+                            # FFT is dominated by the m x lookup work the
+                            # tile triggers anyway.
+                            fut_surr = surrogates.surrogate_futures(
+                                self.surr_key, jnp.asarray(ts[orig]),
+                                jnp.asarray(orig.astype(np.int32)),
+                                n=m, kind=sig.surrogate, cfg=cfg,
+                            )
+                            rho_obs = jnp.asarray(
+                                _pad_rows(rho_chunk[:, orig], self.chunk)
+                            )
+                            streamer.submit(
+                                ("pval", row0, c0, valid),
+                                self.null_tile_for(seg_plan)(
+                                    fidx, fw, fut_surr, rho_obs
+                                ),
+                            )
+        telemetry.emit_compile_cache("sig", cache0)
 
 
 # ------------------------------------------------------------------- driver
 def _writer(
     out_dir, name: str, N: int, order, writer_id: str | None = None
 ) -> TileWriter:
-    w = TileWriter(f"{out_dir}/{name}", N, writer_id=writer_id)
+    w = TileWriter(f"{out_dir}/{name}", N, writer_id=writer_id, stage="sig")
     w.ensure_col_order(order)
     return w
 
@@ -445,6 +460,24 @@ def _finalize_store(
     distributed-completion path (workers' streamed counts only ever
     cover their own chunks, so a fleet always recounts).
     """
+    with telemetry.span("finalize", "store"):
+        return _finalize_store_inner(
+            cfg, sig, rho, conv_w=conv_w, trend_w=trend_w, pv_w=pv_w,
+            p_counts=p_counts, progress=progress,
+        )
+
+
+def _finalize_store_inner(
+    cfg: EDMConfig,
+    sig: SignificanceConfig,
+    rho: np.ndarray,
+    *,
+    conv_w: Optional[TileWriter],
+    trend_w: Optional[TileWriter],
+    pv_w: Optional[TileWriter],
+    p_counts: Optional[np.ndarray] = None,
+    progress: bool = False,
+) -> SignificanceResult:
     m = sig.n_surrogates
     meta_common = {
         "lib_sizes": list(sig.lib_sizes),

@@ -52,9 +52,11 @@ from repro.core.types import EDMConfig
 from repro.data import store
 from repro.data.store import TileWriter
 from repro.inference import SignificanceConfig
+from repro.runtime import telemetry
 from repro.runtime.workqueue import LeaseQueue, WorkUnit, plan_units
 
 SPEC_NAME = "fleet.json"
+STAGE_ORDER = ("phase1", "phase2", "assemble", "sig", "finalize")
 
 
 # ------------------------------------------------------------------- spec
@@ -122,6 +124,7 @@ def spawn_worker(
     worker_id: str,
     ttl: float | None = None,
     env: dict | None = None,
+    unit_retries: int | None = None,
 ) -> subprocess.Popen:
     """Spawn one fleet worker as a detached subprocess.
 
@@ -140,6 +143,8 @@ def spawn_worker(
            "--out", str(out_dir), "--worker-id", worker_id]
     if ttl is not None:
         cmd += ["--ttl", str(ttl)]
+    if unit_retries is not None:
+        cmd += ["--unit-retries", str(unit_retries)]
     return subprocess.Popen(cmd, env=e)
 
 
@@ -165,7 +170,8 @@ class FleetWorker:
 
     def __init__(self, out_dir: str | pathlib.Path, worker_id: str,
                  ttl: float = 600.0, poll: float = 0.25,
-                 timeout: float | None = 3600.0, progress: bool = True):
+                 timeout: float | None = 3600.0, progress: bool = True,
+                 unit_retries: int = 3):
         self.out = pathlib.Path(out_dir)
         spec = load_fleet(self.out)
         self.cfg: EDMConfig = spec["cfg"]
@@ -181,7 +187,7 @@ class FleetWorker:
             )
         self.worker_id = worker_id
         self.queue = LeaseQueue(self.out / "queue", worker_id, ttl=ttl,
-                                poll=poll)
+                                poll=poll, fail_limit=unit_retries)
         self.timeout = timeout
         self.progress = progress
         from repro.core.pipeline import default_mesh
@@ -326,10 +332,12 @@ class FleetWorker:
         # semantics: a chunk counts only when EVERY artifact has it).
         cov = _covered_and(writers)
         already_done = lambda u: bool(cov[u.row0 : u.row0 + u.nrows].all())
-        self.queue.run_stage(
-            plan_units("sig", self.N, self.unit_rows), compute,
-            already_done=already_done, timeout=self.timeout,
-        )
+        with telemetry.span("sig", "stage"):
+            self.queue.run_stage(
+                plan_units("sig", self.N, self.unit_rows), compute,
+                already_done=already_done, timeout=self.timeout,
+            )
+        telemetry.flush()
 
         def do_finalize(unit):
             self._log("finalize: assembly + recount + BH-FDR edges")
@@ -338,30 +346,219 @@ class FleetWorker:
             )
             del out
 
-        self.queue.run_stage(
-            plan_units("finalize", self.N, self.unit_rows), do_finalize,
-            timeout=self.timeout,
-        )
+        with telemetry.span("finalize", "stage"):
+            self.queue.run_stage(
+                plan_units("finalize", self.N, self.unit_rows), do_finalize,
+                timeout=self.timeout,
+            )
+        telemetry.flush()
 
     # --------------------------------------------------------- full run
     def run(self) -> None:
+        """Walk the full stage sequence.  Every stage is wrapped in a
+        telemetry span (so each worker's JSONL covers all five stages
+        even for units it never computed — the barrier wait IS the
+        record) and flushed at the stage boundary, bounding what a
+        SIGKILL can lose to one stage's unflushed tail."""
         t0 = time.time()
-        optE = self._phase1()
-        self._phase2(optE)
-        rho = self._assemble(optE)
+        with telemetry.span("phase1", "stage"):
+            optE = self._phase1()
+        telemetry.flush()
+        with telemetry.span("phase2", "stage"):
+            self._phase2(optE)
+        telemetry.flush()
+        with telemetry.span("assemble", "stage"):
+            rho = self._assemble(optE)
+        telemetry.flush()
         if self.sig is not None and (
             self.sig.lib_sizes or self.sig.n_surrogates > 0
         ):
             self._significance(optE, rho)
         self._log(f"done in {time.time() - t0:.1f}s")
+        telemetry.flush()
+
+
+# ----------------------------------------------------------------- status
+def fleet_status(out_dir: str | pathlib.Path) -> dict:
+    """Live fleet state for a store, from files alone (no worker RPC —
+    masterless observability to match the masterless queue):
+
+      stages    — per stage: total/done/poisoned unit counts plus every
+                  live lease (worker, age, expired?) from the queue dir;
+      coverage  — per store artifact: covered-row fraction from the
+                  writer manifests (the ground truth the queue certifies);
+      telemetry — per worker-file record/violation counts and per-stage
+                  span-time + claim/steal/done rollups from the recorded
+                  JSONL (empty when telemetry was off).
+
+    Returns a JSON-safe dict; :func:`render_status` is the human form.
+    """
+    out = pathlib.Path(out_dir)
+    spec = json.loads((out / SPEC_NAME).read_text())
+    N, unit_rows = spec["N"], spec["unit_rows"]
+    qdir = out / "queue"
+    now = time.time()
+
+    stages = {}
+    for kind in STAGE_ORDER:
+        if kind in ("sig", "finalize") and spec.get("sig") is None:
+            continue
+        units = plan_units(kind, N, unit_rows)
+        done = sum((qdir / f"{u.uid}.done").exists() for u in units)
+        poisoned, leases = [], []
+        for u in units:
+            pp = qdir / f"{u.uid}.poison"
+            if pp.exists():
+                try:
+                    poisoned.append(json.loads(pp.read_text()))
+                except ValueError:
+                    poisoned.append({"uid": u.uid})
+            lp = qdir / f"{u.uid}.lease"
+            if lp.exists() and not (qdir / f"{u.uid}.done").exists():
+                try:
+                    held = json.loads(lp.read_text())
+                except (OSError, ValueError):
+                    continue
+                age = now - held.get("t", now)
+                leases.append({
+                    "uid": u.uid, "worker": held.get("worker"),
+                    "age_s": round(age, 1),
+                    "expired": age > held.get("ttl", 0),
+                })
+        stages[kind] = {"total": len(units), "done": done,
+                        "leases": leases, "poisoned": poisoned}
+
+    coverage = {}
+    artifacts = [("causal_map", out)]
+    if spec.get("sig") is not None:
+        s = spec["sig"]
+        if s.get("lib_sizes"):
+            artifacts += [("rho_conv", out / "rho_conv"),
+                          ("rho_trend", out / "rho_trend")]
+        if s.get("n_surrogates", 0) > 0:
+            artifacts += [("pvals", out / "pvals")]
+    for name, d in artifacts:
+        if not pathlib.Path(d).exists():
+            coverage[name] = {"covered": 0, "total": N, "pct": 0.0}
+            continue
+        cov = TileWriter(d, N).covered()
+        coverage[name] = {
+            "covered": int(cov.sum()), "total": N,
+            "pct": round(100.0 * float(cov.mean()), 1),
+        }
+
+    workers: dict[str, dict] = {}
+    per_stage: dict[str, dict] = {}
+    violations = 0
+    for stem, rec in telemetry.iter_store_records(out):
+        w = workers.setdefault(stem, {"records": 0, "invalid": 0})
+        w["records"] += 1
+        if telemetry.validate(rec):
+            w["invalid"] += 1
+            violations += 1
+            continue
+        st = per_stage.setdefault(
+            rec["stage"],
+            {"span_s": 0.0, "claim": 0, "steal": 0, "done": 0},
+        )
+        if rec["kind"] == "span":
+            st["span_s"] += rec["dur_s"]
+        elif rec["name"] in ("claim", "steal", "done"):
+            st[rec["name"]] += 1
+    for st in per_stage.values():
+        st["span_s"] = round(st["span_s"], 3)
+
+    all_done = all(s["done"] == s["total"] for s in stages.values())
+    full_cov = all(c["pct"] >= 100.0 for c in coverage.values())
+    return {
+        "out": str(out), "N": N, "L": spec.get("L"),
+        "unit_rows": unit_rows,
+        "stages": stages, "coverage": coverage,
+        "telemetry": {"workers": workers, "stages": per_stage,
+                      "violations": violations},
+        "complete": bool(all_done and full_cov and coverage),
+    }
+
+
+def render_status(st: dict) -> str:
+    lines = [
+        f"fleet {st['out']}: N={st['N']} L={st['L']} "
+        f"unit_rows={st['unit_rows']}"
+        f"{'  [COMPLETE]' if st['complete'] else ''}",
+        f"{'stage':<10} {'done':>9}  leases",
+    ]
+    for kind, s in st["stages"].items():
+        parts = []
+        for l in s["leases"]:
+            flag = " EXPIRED" if l["expired"] else ""
+            parts.append(f"{l['uid']}@{l['worker']} {l['age_s']}s{flag}")
+        for p in s["poisoned"]:
+            parts.append(f"{p.get('uid')} POISONED ({p.get('error', '?')})")
+        lines.append(
+            f"{kind:<10} {s['done']:>4}/{s['total']:<4}  "
+            + ("; ".join(parts) or "-")
+        )
+    lines.append("coverage: " + ", ".join(
+        f"{name} {c['pct']}% ({c['covered']}/{c['total']})"
+        for name, c in st["coverage"].items()
+    ))
+    tel = st["telemetry"]
+    if tel["workers"]:
+        nrec = sum(w["records"] for w in tel["workers"].values())
+        lines.append(
+            f"telemetry: {len(tel['workers'])} worker file(s), {nrec} "
+            f"records, {tel['violations']} schema violation(s)"
+        )
+        for stage, s in sorted(tel["stages"].items()):
+            lines.append(
+                f"  {stage:<10} span {s['span_s']:>8.3f}s  "
+                f"claims {s['claim']}  steals {s['steal']}  "
+                f"done {s['done']}"
+            )
+    else:
+        lines.append("telemetry: no records (sink disabled or not started)")
+    return "\n".join(lines)
+
+
+_FLAGS_EPILOG = """\
+commands:
+  work (default)      claim and compute units until the run completes
+  status              render live lease/coverage/telemetry state and exit
+
+flags (work):
+  --out DIR           shared fleet store holding fleet.json   [required]
+  --worker-id ID      stable queue identity                   [required]
+  --ttl SEC           lease expiry                            [600]
+  --poll SEC          barrier poll interval                   [0.25]
+  --timeout SEC       max wait on one stage barrier           [3600]
+  --unit-retries N    attempts before a unit is poisoned      [3]
+
+flags (status):
+  --out DIR           fleet store to inspect                  [required]
+  --json              machine-readable status dict
+  --expect-complete   exit 1 unless all stages done AND every
+                      artifact at 100% row coverage
+
+environment:
+  EDM_TELEMETRY       off | stdout | jsonl:<path>; unset -> per-worker
+                      JSONL at <out>/telemetry/<worker-id>.jsonl
+"""
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n")[0],
+        epilog=_FLAGS_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("cmd", nargs="?", default="work",
+                    choices=["work", "status"],
+                    help="work: run a fleet worker (default); status: "
+                    "render live fleet state for --out and exit")
     ap.add_argument("--out", required=True,
                     help="shared fleet store (must hold fleet.json; see "
                     "edm_run --workers or init_fleet)")
-    ap.add_argument("--worker-id", required=True,
+    ap.add_argument("--worker-id",
                     help="stable queue identity; relaunching a killed "
                     "worker under the SAME id reclaims its leases instantly")
     ap.add_argument("--ttl", type=float, default=600.0,
@@ -371,9 +568,35 @@ def main(argv=None) -> None:
                     help="barrier poll interval seconds")
     ap.add_argument("--timeout", type=float, default=3600.0,
                     help="max seconds to wait on any one stage barrier")
+    ap.add_argument("--unit-retries", type=int, default=3,
+                    help="failed compute attempts (fleet-wide) before a "
+                    "unit is poisoned and the whole fleet exits nonzero")
+    ap.add_argument("--json", action="store_true",
+                    help="status: print the machine-readable status dict")
+    ap.add_argument("--expect-complete", action="store_true",
+                    help="status: exit 1 unless every stage is done and "
+                    "every artifact reports 100%% row coverage")
     args = ap.parse_args(argv)
-    FleetWorker(args.out, args.worker_id, ttl=args.ttl, poll=args.poll,
-                timeout=args.timeout).run()
+
+    if args.cmd == "status":
+        st = fleet_status(args.out)
+        print(json.dumps(st, indent=1) if args.json else render_status(st))
+        if args.expect_complete and not st["complete"]:
+            sys.exit(1)
+        return
+
+    if not args.worker_id:
+        ap.error("work requires --worker-id")
+    telemetry.configure_from_env(
+        default_path=telemetry.worker_jsonl(args.out, args.worker_id),
+        worker=args.worker_id,
+    )
+    try:
+        FleetWorker(args.out, args.worker_id, ttl=args.ttl, poll=args.poll,
+                    timeout=args.timeout,
+                    unit_retries=args.unit_retries).run()
+    finally:
+        telemetry.shutdown()
 
 
 if __name__ == "__main__":

@@ -48,6 +48,7 @@ from repro.data import store
 from repro.data.synthetic import dummy_brain
 from repro.engine import available_engines
 from repro.inference import SignificanceConfig, run_significance
+from repro.runtime import autotune, telemetry
 
 
 def _run_fleet(args, ts, cfg, sig):
@@ -88,17 +89,52 @@ def _run_fleet(args, ts, cfg, sig):
         out, dataset, cfg, sig, unit_rows=args.unit_rows, seed=args.seed
     )
     t0 = time.time()
-    procs = {
-        f"w{i}": edm_fleet.spawn_worker(out, f"w{i}")
-        for i in range(args.workers)
-    }
+
+    def spawn(wid):
+        return edm_fleet.spawn_worker(out, wid,
+                                      unit_retries=args.unit_retries)
+
+    procs = {f"w{i}": spawn(f"w{i}") for i in range(args.workers)}
+    restarts = dict.fromkeys(procs, 0)
     fails = []
-    for wid, p in procs.items():
-        if p.wait() != 0:
-            fails.append(wid)
-    if fails:
-        print(f"warning: worker(s) {fails} exited nonzero "
-              "(surviving workers cover their units)")
+    # Supervise instead of blind-waiting: a POISON marker (a work unit
+    # that exhausted its bounded retries fleet-wide) means no surviving
+    # worker can ever finish — kill the fleet and surface the unit id,
+    # instead of letting the barrier spin on TTL steals until timeout.
+    # A worker that merely CRASHED (nonzero exit, no poison) is
+    # relaunched under the same id — it reclaims its own leases
+    # instantly — up to --max-worker-restarts times.
+    while procs:
+        poison = sorted((out / "queue").glob("*.poison"))
+        if poison:
+            for p in procs.values():
+                p.terminate()
+            for p in procs.values():
+                p.wait()
+            info = json.loads(poison[0].read_text())
+            raise SystemExit(
+                f"fleet failed: work unit {info.get('uid')} failed "
+                f"permanently after {info.get('attempts')} attempt(s): "
+                f"{info.get('error')}"
+            )
+        for wid in list(procs):
+            rc = procs[wid].poll()
+            if rc is None:
+                continue
+            del procs[wid]
+            if rc == 0:
+                continue
+            if restarts[wid] < args.max_worker_restarts:
+                restarts[wid] += 1
+                print(f"worker {wid} exited {rc}; relaunching "
+                      f"({restarts[wid]}/{args.max_worker_restarts})")
+                procs[wid] = spawn(wid)
+            else:
+                fails.append(wid)
+                print(f"warning: worker {wid} exited {rc} with restarts "
+                      "exhausted (surviving workers cover its units)")
+        if procs:
+            time.sleep(0.25)
     # Success = the queue's durable stage witnesses exist (done markers
     # are written strictly AFTER the store commit they certify — a mere
     # data.npy can be a torn open_memmap of a fleet that died
@@ -136,8 +172,31 @@ def _run_fleet(args, ts, cfg, sig):
                   f"{emeta['n_tests']} tests)")
 
 
+_FLAGS_EPILOG = """\
+flag groups:
+  input          --dataset | --synthetic NxL
+  embedding      --e-max --tau
+  geometry       --lib-block --target-tile --knn-tile --stream-depth
+                 (all byte-invisible to outputs; see --autotune)
+  engine         --engine {reference,pallas-*}
+  significance   --lib-sizes --surrogates --fdr --surrogate-kind --seed
+  fleet          --workers --unit-rows --unit-retries
+                 --max-worker-restarts
+  observability  --no-telemetry (default sink: <out>/telemetry/
+                 main.jsonl; EDM_TELEMETRY=off|stdout|jsonl:<path>
+                 overrides); `edm_fleet status --out DIR` renders a
+                 store's live state
+  autotuning     --autotune --tune-from (recorded-timing tuner ->
+                 <out>/tuned.json; DESIGN.md SS11)
+"""
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n")[0],
+        epilog=_FLAGS_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--dataset", help="zarr-lite dataset dir")
     ap.add_argument("--synthetic", help="NxL dummy dataset, e.g. 128x1000")
     ap.add_argument("--out", required=True)
@@ -212,6 +271,36 @@ def main():
         help="fleet work-unit height in rows (claim granularity); "
         "0 = one worker chunk (devices x lib-block)",
     )
+    ap.add_argument(
+        "--unit-retries", type=int, default=3,
+        help="failed compute attempts (fleet-wide, durable) before a work "
+        "unit is poisoned and the fleet exits nonzero with its id",
+    )
+    ap.add_argument(
+        "--max-worker-restarts", type=int, default=2,
+        help="times the fleet driver relaunches a crashed worker process "
+        "under the same id before giving its units to the survivors",
+    )
+    ap.add_argument(
+        "--no-telemetry", action="store_true",
+        help="disable the default per-run telemetry JSONL sink "
+        "(<out>/telemetry/main.jsonl); records are byte-invisible to "
+        "outputs, so this only saves the write traffic.  EDM_TELEMETRY="
+        "off|stdout|jsonl:<path> overrides the default sink instead",
+    )
+    ap.add_argument(
+        "--autotune", action="store_true",
+        help="apply tuned geometry (<out or --tune-from>/tuned.json, or "
+        "a fresh replay of recorded telemetry) before the run, and write "
+        "<out>/tuned.json from this run's telemetry after it; shapes are "
+        "byte-invisible to outputs (DESIGN.md SS11)",
+    )
+    ap.add_argument(
+        "--tune-from",
+        help="store whose recorded telemetry / tuned.json seeds "
+        "--autotune (default: --out itself, i.e. a rerun tunes from the "
+        "previous run)",
+    )
     args = ap.parse_args()
 
     if args.synthetic:
@@ -233,6 +322,34 @@ def main():
         stream_depth=args.stream_depth, target_tile=args.target_tile,
         knn_tile_c=args.knn_tile,
     )
+    if not args.no_telemetry:
+        telemetry.configure_from_env(
+            default_path=telemetry.worker_jsonl(args.out, "main"),
+            worker="main",
+        )
+    if args.autotune:
+        # Tuned shapes are byte-invisible to outputs, so applying a
+        # recommendation can only ever change wall time.  A fleet
+        # restart reads the SAME tuned.json it wrote, so its fleet.json
+        # spec check still passes (deterministic restart shapes).
+        src = args.tune_from or args.out
+        tuned = autotune.load_tuned(src) or autotune.recommend(src)
+        if tuned is not None:
+            import jax
+
+            cfg = autotune.apply_to_cfg(cfg, tuned, len(jax.devices()))
+            print(f"autotune: applied {tuned['recommend']} from {src}")
+        elif args.tune_from:
+            raise SystemExit(
+                f"--tune-from {src}: no tuned.json and no chunk telemetry "
+                "to replay"
+            )
+    telemetry.counter(
+        "fleet", "run_config", engine=cfg.engine, lib_block=cfg.lib_block,
+        target_tile=cfg.target_tile, knn_tile_c=cfg.knn_tile_c,
+        stream_depth=cfg.stream_depth, workers=args.workers,
+        autotune=bool(args.autotune),
+    )
     # ONE sig construction for both drivers — the fleet path must run
     # exactly the config the in-process path would (bit-identity).
     lib_sizes = tuple(int(s) for s in args.lib_sizes.split(",") if s)
@@ -243,7 +360,11 @@ def main():
             alpha=args.fdr, surrogate=args.surrogate_kind, seed=args.seed,
         )
     if args.workers > 0:
-        _run_fleet(args, ts, cfg, sig)
+        try:
+            _run_fleet(args, ts, cfg, sig)
+        finally:
+            telemetry.shutdown()
+        _autotune_epilogue(args)
         return
     t0 = time.time()
     result = run_causal_inference(ts, cfg, out_dir=args.out, progress=True)
@@ -283,6 +404,23 @@ def main():
               + (f"; {len(out.edges)} edges at FDR {args.fdr} "
                  f"(p* = {out.p_threshold:.4g}, {out.n_tests} tests)"
                  if out.edges is not None else ""))
+    telemetry.shutdown()  # flush the run's JSONL before any replay
+    _autotune_epilogue(args)
+
+
+def _autotune_epilogue(args) -> None:
+    """--autotune: replay the telemetry THIS run just recorded and
+    persist the recommendation beside fleet.json for the next run."""
+    if not args.autotune:
+        return
+    tuned = autotune.recommend(args.out)
+    if tuned is None:
+        print("autotune: no chunk telemetry recorded this run "
+              "(nothing computed, or telemetry disabled); tuned.json "
+              "not updated")
+        return
+    p = autotune.write_tuned(args.out, tuned)
+    print(f"autotune: wrote {p}: {tuned['recommend']}")
 
 
 if __name__ == "__main__":

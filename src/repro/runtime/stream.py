@@ -21,6 +21,10 @@ from typing import Any, Callable
 
 import numpy as np
 
+from time import perf_counter as _perf
+
+from repro.runtime import telemetry
+
 
 class ChunkStreamer:
     """Bounded queue of in-flight device chunks with ordered drains.
@@ -38,11 +42,13 @@ class ChunkStreamer:
         self,
         drain: Callable[[Any, np.ndarray], None],
         depth: int = 2,
+        stage: str = "stream",
     ):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.drain = drain
         self.depth = depth
+        self.stage = stage  # telemetry label only (never touches bytes)
         self._pending: collections.deque[tuple[Any, Any]] = collections.deque()
 
     def __len__(self) -> int:
@@ -60,7 +66,13 @@ class ChunkStreamer:
 
     def _drain_one(self) -> None:
         tag, dev = self._pending.popleft()
-        self.drain(tag, np.asarray(dev))  # blocks: compute + D2H copy
+        with telemetry.span(self.stage, "drain",
+                            tag=repr(tag), in_flight=len(self._pending)) as t:
+            t0 = _perf()
+            host = np.asarray(dev)  # blocks: compute + D2H copy
+            t["gather_s"] = _perf() - t0
+            t["bytes"] = int(host.nbytes)
+            self.drain(tag, host)
 
     def flush(self) -> None:
         """Drain everything still in flight (call once after the loop)."""

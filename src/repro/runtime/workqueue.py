@@ -40,8 +40,24 @@ import time
 # "SIGKILL can never tear shared state" contract, so they must share
 # the same implementation.
 from repro.data.store import _unique_tmp, atomic_write_text
+from repro.runtime import telemetry
 
 _STAGELESS = ("phase1", "assemble", "finalize")  # one unit per run
+
+
+class UnitFailedError(RuntimeError):
+    """A work unit exhausted its bounded retry budget (the unit is
+    poisoned: every worker that observes the marker raises too, so the
+    fleet drains instead of spinning on TTL steals forever)."""
+
+    def __init__(self, uid: str, attempts: int, error: str):
+        super().__init__(
+            f"work unit {uid} failed permanently after {attempts} "
+            f"attempt(s): {error}"
+        )
+        self.uid = uid
+        self.attempts = attempts
+        self.error = error
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -104,15 +120,20 @@ class LeaseQueue:
         worker: str,
         ttl: float = 600.0,
         poll: float = 0.25,
+        fail_limit: int = 3,
     ):
         if ttl <= 0:
             raise ValueError("ttl must be > 0")
+        if fail_limit < 1:
+            raise ValueError("fail_limit must be >= 1")
         self.dir = pathlib.Path(root)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.worker = worker
         self.ttl = float(ttl)
         self.poll = float(poll)
+        self.fail_limit = int(fail_limit)
         self._n = 0  # per-claim token counter
+        self._claim_t: dict[str, float] = {}  # uid -> claim time (held span)
 
     # ------------------------------------------------------------ paths
     def _lease(self, unit: WorkUnit) -> pathlib.Path:
@@ -120,6 +141,12 @@ class LeaseQueue:
 
     def _done(self, unit: WorkUnit) -> pathlib.Path:
         return self.dir / f"{unit.uid}.done"
+
+    def _fail(self, unit: WorkUnit) -> pathlib.Path:
+        return self.dir / f"{unit.uid}.fail"
+
+    def _poison(self, unit: WorkUnit) -> pathlib.Path:
+        return self.dir / f"{unit.uid}.poison"
 
     def _payload(self) -> dict:
         self._n += 1
@@ -165,7 +192,7 @@ class LeaseQueue:
             # mark_done writes the done marker BEFORE unlinking the lease,
             # so if our link landed on a name a finisher just freed, the
             # marker is already visible — recheck and back off.
-            return self._acquired(unit)
+            return self._acquired(unit, stolen=False, lease_age=0.0)
         except FileExistsError:
             pass
         finally:
@@ -192,20 +219,34 @@ class LeaseQueue:
             return False
         if self.is_done(unit):  # the holder finished while we deliberated
             return False
+        lease_age = now - held.get("t", now) if held is not None else self.ttl
+        if expired and not own_ghost:
+            telemetry.counter(
+                unit.kind, "lease_expired", lease_age_s=lease_age,
+                uid=unit.uid,
+                prev_worker=None if held is None else held.get("worker"),
+            )
         # Steal by token-stamped replace; the readback arbitrates racing
         # stealers (at most one sees its own token as the survivor).
         atomic_write_text(path, json.dumps(payload))
         back = self._read(path)
         if back is None or back.get("token") != payload["token"]:
             return False
-        return self._acquired(unit)
+        return self._acquired(unit, stolen=True, lease_age=lease_age)
 
-    def _acquired(self, unit: WorkUnit) -> bool:
+    def _acquired(self, unit: WorkUnit, stolen: bool,
+                  lease_age: float) -> bool:
         """Post-acquisition done recheck: a finisher may have completed
         the unit in the window between our pre-checks and the lease
         landing.  Dropping the just-taken lease keeps done units
         lease-free (claim order: done marker always wins)."""
         if not self.is_done(unit):
+            self._claim_t[unit.uid] = time.time()
+            telemetry.counter(
+                unit.kind, "steal" if stolen else "claim",
+                uid=unit.uid, row0=unit.row0, nrows=unit.nrows,
+                lease_age_s=lease_age,
+            )
             return True
         try:
             self._lease(unit).unlink()
@@ -247,10 +288,60 @@ class LeaseQueue:
             self._done(unit),
             json.dumps({"worker": self.worker, "t": time.time()}),
         )
+        telemetry.counter(
+            unit.kind, "done", uid=unit.uid, row0=unit.row0,
+            nrows=unit.nrows,
+            held_s=time.time() - self._claim_t.pop(unit.uid, time.time()),
+        )
         try:
             self._lease(unit).unlink()
         except OSError:
             pass
+
+    # ---------------------------------------------------- bounded retries
+    def record_failure(self, unit: WorkUnit, error: str) -> int:
+        """Durably count one failed compute attempt of ``unit``; returns
+        the total attempt count.  At ``fail_limit`` attempts the unit is
+        POISONED (a durable ``.poison`` marker): every worker's
+        run_stage raises :class:`UnitFailedError` on observing it, so a
+        unit that crashes every claimer drains the fleet with a clear
+        verdict instead of cycling through TTL steals forever.
+
+        The count is a read-modify-write over an atomic file: racing
+        workers may undercount one attempt, which only ever grants a
+        poison unit one extra try — the bound stays bounded.
+        """
+        have = self._read(self._fail(unit)) or {"attempts": 0, "errors": []}
+        attempts = int(have.get("attempts", 0)) + 1
+        errors = (list(have.get("errors", [])) + [
+            {"worker": self.worker, "t": time.time(), "error": error[:500]}
+        ])[-self.fail_limit:]
+        atomic_write_text(
+            self._fail(unit),
+            json.dumps({"attempts": attempts, "errors": errors}),
+        )
+        telemetry.counter(
+            unit.kind, "unit_failed", uid=unit.uid, attempts=attempts,
+            error=error[:200],
+        )
+        if attempts >= self.fail_limit:
+            atomic_write_text(
+                self._poison(unit),
+                json.dumps({"uid": unit.uid, "attempts": attempts,
+                            "worker": self.worker, "error": error[:500]}),
+            )
+            telemetry.counter(unit.kind, "unit_poisoned", uid=unit.uid,
+                              attempts=attempts)
+        self.release(unit)
+        return attempts
+
+    def poisoned(self, units: list[WorkUnit]) -> dict | None:
+        """The first poison marker among ``units`` (or None)."""
+        for u in units:
+            p = self._read(self._poison(u))
+            if p is not None:
+                return {"uid": u.uid, **p}
+        return None
 
     # ---------------------------------------------------------- barrier
     def run_stage(
@@ -273,6 +364,14 @@ class LeaseQueue:
         the barrier cannot deadlock on a crash.  ``timeout`` (seconds)
         bounds the total wait and raises TimeoutError — a fleet-wide
         wedge is a bug, not a state to park in forever.
+
+        A compute(unit) exception is a FAILED ATTEMPT, not instant
+        death: it is durably counted (:meth:`record_failure`), the lease
+        released, and the unit retried — by this worker or any other —
+        up to ``fail_limit`` total attempts across the fleet, after
+        which the unit is poisoned and every worker's barrier raises
+        :class:`UnitFailedError` (bounded retries; the driver surfaces
+        the failing unit id and exits nonzero).
         """
         t0 = time.monotonic()
         computed = 0
@@ -281,9 +380,25 @@ class LeaseQueue:
                 if not self.is_done(u) and already_done(u):
                     self.mark_done(u)
         while True:
+            poison = self.poisoned(units)
+            if poison is not None:
+                raise UnitFailedError(
+                    poison["uid"], int(poison.get("attempts", self.fail_limit)),
+                    str(poison.get("error", "unknown")),
+                )
             unit = self.claim_next(units)
             if unit is not None:
-                compute(unit)
+                try:
+                    compute(unit)
+                except (KeyboardInterrupt, SystemExit):
+                    self.release(unit)
+                    raise
+                except Exception as e:  # noqa: BLE001 - counted + rethrown at limit
+                    attempts = self.record_failure(unit, repr(e))
+                    if attempts >= self.fail_limit:
+                        raise UnitFailedError(unit.uid, attempts,
+                                              repr(e)) from e
+                    continue
                 self.mark_done(unit)
                 computed += 1
                 continue

@@ -10,6 +10,7 @@ small 2-worker variant only.
 import json
 import os
 import pathlib
+import shutil
 import signal
 import time
 
@@ -20,6 +21,7 @@ from repro.core.types import EDMConfig
 from repro.data import store
 from repro.inference import SignificanceConfig
 from repro.launch import edm_fleet
+from repro.runtime import autotune, telemetry
 
 ARTIFACTS = ("causal_map", "rho_conv", "rho_trend", "pvals", "edges")
 
@@ -66,6 +68,33 @@ def _init(tmp_path, ts, cfg, sig, synthetic):
     return out
 
 
+def _assert_telemetry_and_status(out, worker_ids):
+    """DESIGN.md SS11 acceptance: every worker's JSONL is schema-valid
+    and holds a span for ALL five pipeline stages (the barrier wait IS
+    the record), and fleet status agrees with the artifacts."""
+    span_stages: dict[str, set] = {}
+    for stem, rec in telemetry.iter_store_records(out):
+        assert telemetry.validate(rec) == [], (stem, rec)
+        if rec["kind"] == "span":
+            span_stages.setdefault(stem, set()).add(rec["stage"])
+    assert set(worker_ids) <= set(span_stages), \
+        f"missing telemetry files: {worker_ids} vs {sorted(span_stages)}"
+    for wid in worker_ids:
+        for stage in telemetry.PIPELINE_STAGES:
+            assert stage in span_stages[wid], f"{wid} missing {stage} span"
+
+    st = edm_fleet.fleet_status(out)
+    assert st["complete"], st
+    for name, c in st["coverage"].items():
+        assert c["pct"] == 100.0, (name, c)
+    for kind, s in st["stages"].items():
+        assert s["done"] == s["total"] and not s["poisoned"], (kind, s)
+        assert s["leases"] == [], (kind, s)
+    assert st["telemetry"]["violations"] == 0
+    assert edm_fleet.render_status(st).count("COMPLETE") == 1
+    return st
+
+
 def test_fleet_two_workers_byte_identical(tmp_path):
     """W=2 subprocess fleet == fresh in-process W=1 run, byte for byte
     (causal_map, rho_conv, rho_trend, pvals, edges)."""
@@ -78,6 +107,12 @@ def test_fleet_two_workers_byte_identical(tmp_path):
     out = _init(tmp_path, ts, cfg, sig, "16x250")
     _wait(_spawn_fleet(out, 2))
     _assert_byte_identical(out, base)
+    _assert_telemetry_and_status(out, ["w0", "w1"])
+    # the recorded timings are enough to autotune the next run
+    tuned = autotune.recommend(out)
+    assert tuned is not None, "fleet run recorded no tunable telemetry"
+    autotune.write_tuned(out, tuned)
+    assert autotune.load_tuned(out)["recommend"] == tuned["recommend"]
 
 
 @pytest.mark.skipif(
@@ -91,12 +126,22 @@ def test_fleet_kill_one_worker_relaunch_byte_identical(tmp_path):
     assembled artifacts must equal a fresh W=1 run byte for byte."""
     from repro.data.synthetic import dummy_brain
 
+    # CI pins the store to a known path (CI_FLEET_STORE) so follow-up
+    # workflow steps can run `edm_fleet status` and upload telemetry/.
+    ci_store = os.environ.get("CI_FLEET_STORE")
+    if ci_store:
+        base_dir = pathlib.Path(ci_store)
+        shutil.rmtree(base_dir, ignore_errors=True)
+        base_dir.mkdir(parents=True)
+    else:
+        base_dir = tmp_path
+
     ts = dummy_brain(64, 500, seed=0)
     cfg = EDMConfig(E_max=6, lib_block=4, target_tile=16)
     sig = SignificanceConfig(lib_sizes=(60, 120, 240), n_surrogates=20,
                              seed=0)
     base = _baseline(tmp_path, ts, cfg, sig)
-    out = _init(tmp_path, ts, cfg, sig, "64x500")
+    out = _init(base_dir, ts, cfg, sig, "64x500")
 
     procs = _spawn_fleet(out, 4)
     # wait until phase 2 is visibly underway (some tile durable), then
@@ -122,3 +167,14 @@ def test_fleet_kill_one_worker_relaunch_byte_identical(tmp_path):
     assert leases == [], f"stale leases after completion: {leases}"
     meta = json.loads((out / "causal_map" / "meta.json").read_text())
     assert meta.get("fleet") is True
+
+    # telemetry schema + status acceptance: all four workers (including
+    # the relaunched w0, whose JSONL survived the SIGKILL via the
+    # crash-safe rewrite) recorded every stage; status reports complete
+    st = _assert_telemetry_and_status(out, ["w0", "w1", "w2", "w3"])
+    assert len(st["telemetry"]["workers"]) >= 4
+    # and the run left enough recorded timing to write tuned.json
+    tuned = autotune.recommend(out)
+    assert tuned is not None
+    p = autotune.write_tuned(out, tuned)
+    assert p.exists() and autotune.load_tuned(out) is not None

@@ -1,0 +1,299 @@
+"""Telemetry spine + autotuner (DESIGN.md SS11): record schema, sink
+protocol (memory / stdout / crash-safe JSONL), byte-invisibility of
+sinks to pipeline outputs, and the recorded-timing autotuner deriving
+tuned geometry knobs that reproduce byte-identical artifacts."""
+import io
+import json
+
+import numpy as np
+import pytest
+
+from repro.runtime import autotune, telemetry
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Every test starts and ends with no sinks installed — telemetry is
+    process-global state."""
+    telemetry.shutdown()
+    telemetry.set_identity("main")
+    yield
+    telemetry.shutdown()
+    telemetry.set_identity("main")
+
+
+# ---------------------------------------------------------------- schema
+def test_span_and_counter_records_validate(tmp_path):
+    mem = telemetry.MemorySink()
+    telemetry.configure(mem, worker="w7")
+    telemetry.counter("queue", "claim", uid="sig_0", lease_age_s=0.0)
+    with telemetry.span("phase2", "chunk", row0=0) as t:
+        t["rows"] = 8  # attrs discovered mid-span merge into the record
+    assert len(mem.records) == 2
+    for rec in mem.records:
+        assert telemetry.validate(rec) == [], rec
+        assert rec["worker"] == "w7"
+    c, s = mem.records
+    assert c["kind"] == "counter" and c["value"] == 1.0
+    assert s["kind"] == "span" and s["dur_s"] >= 0
+    assert s["attrs"] == {"row0": 0, "rows": 8}
+    assert s["seq"] > c["seq"]  # per-process monotonic
+
+
+def test_validate_rejects_malformed_records():
+    good = {"v": 1, "kind": "counter", "stage": "queue", "name": "x",
+            "t": 0.0, "value": 1.0, "worker": "w", "pid": 1, "seq": 1,
+            "attrs": {}}
+    assert telemetry.validate(good) == []
+    assert telemetry.validate({**good, "stage": "warp"})  # unknown stage
+    assert telemetry.validate({**good, "kind": "gauge"})
+    assert telemetry.validate({**good, "v": 99})
+    bad = dict(good)
+    del bad["worker"]
+    assert any("worker" in e for e in telemetry.validate(bad))
+    span = {**good, "kind": "span"}
+    span.pop("value")
+    assert telemetry.validate(span)  # span without dur_s
+    assert telemetry.validate({**span, "dur_s": -1.0})
+    assert telemetry.validate({**good, "attrs": {"x": object()}})
+
+
+def test_disabled_telemetry_is_a_noop():
+    assert not telemetry.enabled()
+    telemetry.counter("queue", "claim")  # must not raise
+    with telemetry.span("sig", "chunk") as t:
+        t["rows"] = 4  # the yielded dict is a harmless scratch pad
+    telemetry.flush()
+
+
+# ----------------------------------------------------------------- sinks
+def test_stdout_sink_greppable_lines():
+    buf = io.StringIO()
+    telemetry.configure(telemetry.StdoutSink(file=buf))
+    telemetry.counter("fleet", "run_config", 3.0, workers=3)
+    line = buf.getvalue().strip()
+    assert line.startswith("telemetry,fleet,run_config,3.000000,")
+    assert json.loads(line.split(",", 4)[4]) == {"workers": 3}
+
+
+def test_jsonl_sink_crash_safe_and_reloads_previous_generation(tmp_path):
+    p = tmp_path / "telemetry" / "w0.jsonl"
+    sink = telemetry.JsonlSink(p, flush_every=1)
+    telemetry.configure(sink, worker="w0")
+    telemetry.counter("queue", "claim", uid="a")
+    telemetry.counter("queue", "done", uid="a")
+    # every generation on disk is complete, parseable JSONL
+    recs = telemetry.read_jsonl(p)
+    assert [r["name"] for r in recs] == ["claim", "done"]
+    assert all(telemetry.validate(r) == [] for r in recs)
+
+    # relaunch after SIGKILL: a new sink on the same path preloads the
+    # previous generation, so the rewrite never loses records
+    telemetry.configure()  # simulate death without another flush
+    sink2 = telemetry.JsonlSink(p, flush_every=1)
+    telemetry.configure(sink2, worker="w0")
+    telemetry.counter("sig", "done", uid="b")
+    names = [r["name"] for r in telemetry.read_jsonl(p)]
+    assert names == ["claim", "done", "done"]
+
+    # a torn trailing line (foreign non-atomic writer) is tolerated
+    with open(p, "a") as f:
+        f.write('{"v": 1, "kind": "cou')
+    assert len(telemetry.read_jsonl(p)) == 3
+
+
+def test_jsonl_sink_batches_flushes(tmp_path):
+    p = tmp_path / "w.jsonl"
+    telemetry.configure(telemetry.JsonlSink(p, flush_every=100))
+    telemetry.counter("queue", "claim")
+    assert telemetry.read_jsonl(p) == []  # buffered, not yet durable
+    telemetry.flush()
+    assert len(telemetry.read_jsonl(p)) == 1
+
+
+def test_configure_from_env(tmp_path, monkeypatch, capsys):
+    default = tmp_path / "telemetry" / "main.jsonl"
+    monkeypatch.setenv("EDM_TELEMETRY", "off")
+    telemetry.configure_from_env(default_path=default, worker="m")
+    assert not telemetry.enabled()
+
+    monkeypatch.setenv("EDM_TELEMETRY", f"jsonl:{tmp_path / 'x.jsonl'}")
+    telemetry.configure_from_env(default_path=default, worker="m")
+    telemetry.counter("fleet", "run_config")
+    telemetry.flush()
+    assert len(telemetry.read_jsonl(tmp_path / "x.jsonl")) == 1
+
+    monkeypatch.delenv("EDM_TELEMETRY")
+    telemetry.configure_from_env(default_path=default, worker="m")
+    telemetry.counter("fleet", "run_config")
+    telemetry.flush()
+    assert len(telemetry.read_jsonl(default)) == 1
+
+    telemetry.configure_from_env(default_path=None, worker="m")
+    assert not telemetry.enabled()  # no default, no env -> disabled
+
+
+# ------------------------------------------- byte-invisibility + autotune
+def _small_run(out_dir, cfg=None, telemetry_on=False):
+    from repro.core.pipeline import run_causal_inference
+    from repro.core.types import EDMConfig
+    from repro.data.synthetic import dummy_brain
+    from repro.inference import SignificanceConfig, run_significance
+
+    ts = dummy_brain(10, 200, seed=3)
+    cfg = cfg or EDMConfig(E_max=3, lib_block=5, target_tile=4)
+    sig = SignificanceConfig(lib_sizes=(30, 60), n_surrogates=4, seed=0)
+    if telemetry_on:
+        telemetry.configure(
+            telemetry.JsonlSink(
+                telemetry.worker_jsonl(out_dir, "main"), flush_every=1),
+            worker="main",
+        )
+    res = run_causal_inference(ts, cfg, out_dir=str(out_dir))
+    run_significance(ts, np.asarray(res.optE), np.asarray(res.rho),
+                     cfg, sig, out_dir=str(out_dir))
+    telemetry.shutdown()
+    return ts, cfg, sig
+
+
+def test_sinks_byte_invisible_and_all_stages_recorded(tmp_path):
+    """The tentpole invariant: a JSONL-sink run produces byte-identical
+    artifacts to a sink-disabled run, and its records are schema-valid
+    and cover every pipeline stage the run walked."""
+    _small_run(tmp_path / "off", telemetry_on=False)
+    _small_run(tmp_path / "on", telemetry_on=True)
+    for art in ("causal_map", "rho_conv", "rho_trend", "pvals", "edges"):
+        a = np.load(tmp_path / "on" / art / "data.npy")
+        b = np.load(tmp_path / "off" / art / "data.npy")
+        assert a.tobytes() == b.tobytes(), f"{art} differs with sink on"
+    # a sink-disabled run writes no telemetry at all
+    assert not (tmp_path / "off" / "telemetry").exists()
+
+    recs = [r for _, r in telemetry.iter_store_records(tmp_path / "on")]
+    assert recs, "sink-enabled run recorded nothing"
+    for r in recs:
+        assert telemetry.validate(r) == [], r
+    span_stages = {r["stage"] for r in recs if r["kind"] == "span"}
+    for stage in ("phase1", "phase2", "assemble", "sig", "finalize"):
+        assert stage in span_stages, f"no span recorded for {stage}"
+    # store + stream layers report through the same spine
+    names = {(r["stage"], r["name"]) for r in recs}
+    assert ("store", "manifest_commit") in names or any(
+        n in ("write_tile", "write_block") for _, n in names
+    )
+
+
+def test_autotune_recommend_write_load_apply_roundtrip(tmp_path):
+    """replay -> recommend from recorded timings; tuned.json roundtrip;
+    apply_to_cfg stamps the shapes; a rerun under the tuned shapes is
+    byte-identical (the invariant that makes autotuning safe)."""
+    import dataclasses
+
+    out = tmp_path / "run"
+    _, cfg, _ = _small_run(out, telemetry_on=True)
+
+    tuned = autotune.recommend(out)
+    assert tuned is not None and tuned["v"] == autotune.TUNED_VERSION
+    rec = tuned["recommend"]
+    assert rec.get("chunk_rows", 0) >= autotune.CHUNK_ROWS_MIN
+    ev = tuned["evidence"]
+    assert ev["chunks"] > 0 and ev["chunk_rows_done"] > 0
+
+    p = autotune.write_tuned(out, tuned)
+    assert p.name == "tuned.json" and p.parent == out
+    assert autotune.load_tuned(out) == tuned
+    assert autotune.load_tuned(tmp_path) is None  # absent store
+    p.write_text("{broken")
+    assert autotune.load_tuned(out) is None  # torn file never applies
+    autotune.write_tuned(out, tuned)
+
+    cfg2 = autotune.apply_to_cfg(cfg, tuned, n_devices=1)
+    if rec.get("chunk_rows"):
+        assert cfg2.lib_block == rec["chunk_rows"]
+    if rec.get("target_tile"):
+        assert cfg2.target_tile == rec["target_tile"]
+    if rec.get("knn_tile_c"):
+        assert cfg2.knn_tile_c == rec["knn_tile_c"]
+
+    # geometry is bit-invisible: rerun under the tuned shapes == original
+    clamped = dataclasses.replace(
+        cfg2, lib_block=min(cfg2.lib_block, 10),
+        target_tile=min(cfg2.target_tile, 10),
+    )
+    _small_run(tmp_path / "tuned", cfg=clamped, telemetry_on=False)
+    for art in ("causal_map", "rho_conv", "pvals"):
+        a = np.load(tmp_path / "tuned" / art / "data.npy")
+        b = np.load(out / art / "data.npy")
+        assert a.tobytes() == b.tobytes(), f"{art} differs under tuning"
+
+
+def test_autotune_no_telemetry_returns_none(tmp_path):
+    assert autotune.recommend(tmp_path) is None
+    with pytest.raises(SystemExit, match="no chunk telemetry"):
+        autotune.main([str(tmp_path)])
+
+
+def test_autotune_decision_rules(tmp_path):
+    """Synthetic telemetry exercising each band of the decision rules
+    (no pipeline run needed — the tuner replays records, not stores)."""
+    def store_with(records):
+        import shutil
+        d = tmp_path / "synth"
+        if d.exists():
+            shutil.rmtree(d)
+        p = telemetry.worker_jsonl(d, "w0")
+        p.parent.mkdir(parents=True)
+        base = {"v": 1, "t": 0.0, "worker": "w0", "pid": 1, "attrs": {}}
+        p.write_text("".join(
+            json.dumps({**base, "seq": i, **r}) + "\n"
+            for i, r in enumerate(records)
+        ))
+        return d
+
+    chunk = {"kind": "span", "stage": "sig", "name": "chunk",
+             "attrs": {"rows": 8, "chunk_rows": 8, "tile": 32,
+                       "n_tiles": 4}}
+    write = {"kind": "span", "stage": "store", "name": "write_tile"}
+    cal = {"kind": "counter", "stage": "engine", "name": "knn_tile",
+           "value": 256.0, "attrs": {"Lc": 400}}
+    nrec = {"kind": "span", "stage": "assemble", "name": "causal_map",
+            "dur_s": 0.1, "attrs": {"N": 512}}
+
+    # 2 rows/s -> chunk_rows grows toward TARGET_CHUNK_S of compute
+    d = store_with([{**chunk, "dur_s": 4.0}, nrec, cal])
+    t = autotune.recommend(d)["recommend"]
+    assert t["chunk_rows"] == 40  # 2 rows/s * 20 s, rounded to 8s
+    assert t["knn_tile_c"] == 256
+
+    # write-dominated tiles (ratio > HI) -> target_tile doubles
+    d = store_with([{**chunk, "dur_s": 4.0},
+                    {**write, "dur_s": 0.5}, nrec])
+    assert autotune.recommend(d)["recommend"]["target_tile"] == 64
+
+    # negligible write cost with several tiles/chunk -> tile halves
+    d = store_with([{**chunk, "dur_s": 40.0},
+                    {**write, "dur_s": 0.0001}, nrec])
+    assert autotune.recommend(d)["recommend"]["target_tile"] == 16
+
+    # recommendations never exceed the run's N
+    small = {**chunk, "attrs": {**chunk["attrs"]}}
+    nsmall = {**nrec, "attrs": {"N": 24}}
+    d = store_with([{**small, "dur_s": 8.0}, nsmall])
+    assert autotune.recommend(d)["recommend"]["chunk_rows"] <= 24
+
+
+def test_compile_cache_probe(tmp_path, monkeypatch):
+    monkeypatch.delenv("JAX_COMPILATION_CACHE_DIR", raising=False)
+    assert telemetry.compile_cache_entries() is None
+    cache = tmp_path / "cache"
+    cache.mkdir()
+    (cache / "a").write_text("")
+    monkeypatch.setenv("JAX_COMPILATION_CACHE_DIR", str(cache))
+    assert telemetry.compile_cache_entries() == 1
+    mem = telemetry.MemorySink()
+    telemetry.configure(mem)
+    (cache / "b").write_text("")
+    telemetry.emit_compile_cache("phase1", before=1)
+    (rec,) = mem.records
+    assert rec["name"] == "compile_cache" and rec["value"] == 1.0
+    assert rec["attrs"] == {"entries": 2, "new": 1}

@@ -12,7 +12,12 @@ import numpy as np
 import pytest
 
 from repro.data.store import TileWriter
-from repro.runtime.workqueue import LeaseQueue, WorkUnit, plan_units
+from repro.runtime.workqueue import (
+    LeaseQueue,
+    UnitFailedError,
+    WorkUnit,
+    plan_units,
+)
 
 
 # ------------------------------------------------------------ unit grids
@@ -177,6 +182,92 @@ def test_run_stage_reclaims_crashed_holder_after_expiry(tmp_path):
     assert LeaseQueue(tmp_path, "dead", ttl=0.05).try_claim(units[0])
     q = LeaseQueue(tmp_path, "b", ttl=60, poll=0.01)
     assert q.run_stage(units, lambda u: None, timeout=10) == 1
+
+
+# --------------------------------------------------------- bounded retries
+def test_flaky_unit_retried_then_succeeds(tmp_path):
+    """A transiently-failing compute is a counted attempt, not instant
+    death: the unit is released, retried, and completes."""
+    units = plan_units("sig", 4, 4)
+    q = LeaseQueue(tmp_path, "a", ttl=60, poll=0.01, fail_limit=3)
+    calls = []
+
+    def compute(u):
+        calls.append(u.uid)
+        if len(calls) < 2:
+            raise RuntimeError("transient")
+
+    assert q.run_stage(units, compute, timeout=10) == 1
+    assert len(calls) == 2
+    assert q.pending(units) == []
+    # the attempt was durably counted, but the unit was never poisoned
+    assert (tmp_path / f"{units[0].uid}.fail").exists()
+    assert not (tmp_path / f"{units[0].uid}.poison").exists()
+
+
+def test_unit_poisoned_at_fail_limit(tmp_path):
+    units = plan_units("phase2", 4, 4)
+    q = LeaseQueue(tmp_path, "a", ttl=60, poll=0.01, fail_limit=2)
+
+    def compute(u):
+        raise ValueError("deterministically broken")
+
+    with pytest.raises(UnitFailedError) as ei:
+        q.run_stage(units, compute, timeout=10)
+    assert ei.value.uid == units[0].uid
+    assert ei.value.attempts == 2
+    assert "broken" in ei.value.error
+    assert (tmp_path / f"{units[0].uid}.poison").exists()
+    info = json.loads((tmp_path / f"{units[0].uid}.fail").read_text())
+    assert info["attempts"] == 2 and len(info["errors"]) == 2
+
+
+def test_poison_drains_every_worker_not_just_the_failer(tmp_path):
+    """The fleet-exit property: once a unit is poisoned, EVERY worker's
+    barrier raises with the failing uid instead of spinning on TTL
+    steals forever."""
+    units = plan_units("sig", 8, 4)
+    qa = LeaseQueue(tmp_path, "a", ttl=60, poll=0.01, fail_limit=1)
+    with pytest.raises(UnitFailedError):
+        qa.run_stage(
+            units,
+            lambda u: (_ for _ in ()).throw(RuntimeError("boom")),
+            timeout=10,
+        )
+    qb = LeaseQueue(tmp_path, "b", ttl=60, poll=0.01)
+    with pytest.raises(UnitFailedError, match=units[0].uid):
+        qb.run_stage(units, lambda u: None, timeout=10)
+    assert qb.poisoned(units)["uid"] == units[0].uid
+
+
+def test_retry_budget_is_fleet_wide(tmp_path):
+    """Attempts accumulate across workers — a unit that crashes every
+    claimer exhausts ONE shared budget, not one per worker."""
+    u = plan_units("sig", 4, 4)[0]
+    qa = LeaseQueue(tmp_path, "a", ttl=60, fail_limit=3)
+    qb = LeaseQueue(tmp_path, "b", ttl=60, fail_limit=3)
+    assert qa.try_claim(u)
+    assert qa.record_failure(u, "e1") == 1
+    assert qb.try_claim(u)  # record_failure released a's lease
+    assert qb.record_failure(u, "e2") == 2
+    assert qa.try_claim(u)
+    assert qa.record_failure(u, "e3") == 3
+    assert (tmp_path / f"{u.uid}.poison").exists()
+
+
+def test_interrupt_releases_without_counting_an_attempt(tmp_path):
+    """Ctrl-C / SystemExit is a shutdown, not a unit failure: the lease
+    is returned and the retry budget untouched."""
+    units = plan_units("phase2", 4, 4)
+    q = LeaseQueue(tmp_path, "a", ttl=3600, poll=0.01)
+
+    def compute(u):
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        q.run_stage(units, compute, timeout=10)
+    assert not (tmp_path / f"{units[0].uid}.fail").exists()
+    assert LeaseQueue(tmp_path, "b", ttl=3600).try_claim(units[0])
 
 
 # ----------------------------------------- multi-writer TileWriter store
