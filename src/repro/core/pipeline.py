@@ -270,7 +270,8 @@ def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:
 
 
 def _phase2_untiled(
-    ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress
+    ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress,
+    on_chunk=None,
 ):
     """Legacy single-tile phase 2: full-width (chunk, N) row blocks."""
     N = ts.shape[0]
@@ -301,6 +302,8 @@ def _phase2_untiled(
     with ChunkStreamer(drain, depth=cfg.stream_depth,
                        stage="phase2") as streamer:
         for row0, valid in chunk_plan:
+            if on_chunk is not None:
+                on_chunk(row0)
             with telemetry.span("phase2", "chunk", row0=row0,
                                 rows=valid, tiled=False) as t:
                 with telemetry.span("phase2", "device_put", row0=row0):
@@ -311,7 +314,8 @@ def _phase2_untiled(
 
 
 def _phase2_tiled(
-    ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress
+    ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress,
+    on_chunk=None,
 ):
     """2D (row-chunk x col-tile) phase 2: tables once per chunk, targets in
     column tiles of cfg.target_tile, blocks streamed with
@@ -353,6 +357,8 @@ def _phase2_tiled(
     with ChunkStreamer(drain, depth=cfg.stream_depth,
                        stage="phase2") as streamer:
         for row0, valid in chunk_plan:
+            if on_chunk is not None:
+                on_chunk(row0)
             with telemetry.span("phase2", "chunk", row0=row0, rows=valid,
                                 tiled=True, tile=T,
                                 n_tiles=len(tile_plans)) as t:
@@ -423,6 +429,7 @@ def run_phase2_chunks(
     writer: Optional[TileWriter] = None,
     rho: Optional[np.ndarray] = None,
     progress: bool = False,
+    on_chunk=None,
 ) -> None:
     """Phase 2 over an EXPLICIT (row0, nrows) chunk plan — the claimable
     compute unit of the work queue (DESIGN.md SS10).
@@ -432,11 +439,14 @@ def run_phase2_chunks(
     or across worker processes writing through writer_id-sharded
     TileWriters — produces bit-identical blocks.  ``writer`` streams
     blocks to the store; with ``rho`` they land in a host map instead.
+    ``on_chunk(row0)`` fires before each chunk dispatch — fleet workers
+    renew their unit lease there, same contract as :func:`run_phase1`.
     """
     chunk = mesh.size * cfg.lib_block
     phase2 = _phase2_tiled if cfg.target_tile else _phase2_untiled
     cache0 = telemetry.compile_cache_entries()
-    phase2(ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho, progress)
+    phase2(ts, ts_fut, optE, cfg, mesh, chunk, chunk_plan, writer, rho,
+           progress, on_chunk=on_chunk)
     telemetry.emit_compile_cache("phase2", cache0)
 
 
@@ -452,12 +462,21 @@ def run_causal_inference(
     With ``out_dir`` set, phase-2 blocks stream to a :class:`TileWriter`
     and the returned causal map is a disk-backed memmap
     (<out_dir>/causal_map/data.npy) — no dense (N, N) host array is
-    allocated at any point.
+    allocated at any point.  The store is fingerprint-stamped on first
+    write and checked on every resume: tiles computed from different
+    data or a different config can never silently mix (DESIGN.md SS12).
     """
     if mesh is None:
         mesh = default_mesh()
     N, L = ts.shape
     chunk = mesh.size * cfg.lib_block
+
+    if out_dir is not None:
+        from repro.runtime import integrity
+
+        integrity.stamp_fingerprint(
+            out_dir, integrity.fingerprint_of(np.asarray(ts, np.float32), cfg)
+        )
 
     # ---- phase 1: simplex projection -> optE --------------------------
     simplex_rhos, optE = run_phase1(ts, cfg, mesh)

@@ -6,6 +6,7 @@ map output written as large sequential BLOCK shards (never the
 small-random-write pattern that bottlenecked GPFS, SSIII-C)."""
 from __future__ import annotations
 
+import errno
 import json
 import os
 import pathlib
@@ -16,8 +17,23 @@ import numpy as np
 # telemetry imports NOTHING from the store at module scope (its JSONL
 # sink borrows atomic_write_text lazily inside flush), so this edge is
 # acyclic: the store emits write/fsync spans, the sink persists them
-# with the store's own durability primitive.
-from repro.runtime import telemetry
+# with the store's own durability primitive.  integrity's checksum /
+# fingerprint primitives are pure (its fsck half imports the store
+# lazily), and faultpoints imports only telemetry — both acyclic too.
+from repro.runtime import faultpoints, telemetry
+from repro.runtime.integrity import (
+    Crc32,
+    IntegrityError,
+    checksum_file,
+    manifest_with_crc,
+    read_manifest_shard,
+    write_sidecar,
+)
+
+#: errnos where retrying the SAME write is pointless (the medium, not
+#: the attempt, is broken) — the work queue poisons the unit immediately
+#: instead of burning its retry budget (see workqueue._fatal_oserror).
+FATAL_WRITE_ERRNOS = (errno.ENOSPC, errno.EDQUOT, errno.EROFS)
 
 
 def _fsync_dir(path: pathlib.Path) -> None:
@@ -41,37 +57,91 @@ def _unique_tmp(path: pathlib.Path) -> pathlib.Path:
     return path.parent / f"{path.name}.tmp-{os.getpid()}-{os.urandom(4).hex()}"
 
 
-def atomic_write_text(path: str | pathlib.Path, text: str) -> None:
+def _classify_write_error(e: OSError, path: pathlib.Path,
+                          tmp: pathlib.Path) -> OSError:
+    """Failed-write cleanup + classification: unlink the temp (a dead
+    half-written temp must not linger as .tmp residue on a FULL disk of
+    all places), and rewrap disk-exhaustion errnos with a clear message
+    so the fleet can poison the unit instead of retrying it."""
+    try:
+        tmp.unlink()
+    except OSError:
+        pass
+    if e.errno in FATAL_WRITE_ERRNOS:
+        return OSError(e.errno, f"out of space at {path} "
+                                f"({os.strerror(e.errno)})")
+    return e
+
+
+def atomic_write_text(
+    path: str | pathlib.Path, text: str, fault: str | None = None
+) -> None:
     """write-temp + fsync + os.replace: a writer killed at any point
     leaves the old file or the new file, never a torn mix.  The ONE
     durability primitive of the store AND the work queue (workqueue.py
-    imports it) — keep fixes here, not in copies."""
+    imports it) — keep fixes here, not in copies.
+
+    ``fault`` names this write's fault-point prefix (faultpoints.py):
+    ``<fault>_pre_rename`` fires in the temp-durable-but-invisible
+    window the atomicity claim is really about."""
     path = pathlib.Path(path)
     tmp = _unique_tmp(path)
-    with open(tmp, "w") as f:
-        f.write(text)
-        f.flush()
-        os.fsync(f.fileno())
+    try:
+        with open(tmp, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+    except OSError as e:
+        raise _classify_write_error(e, path, tmp) from e
+    if fault is not None:
+        faultpoints.fire(f"{fault}_pre_rename")
     os.replace(tmp, path)
     _fsync_dir(path.parent)
 
 
-def atomic_save_npy(path: pathlib.Path, arr: np.ndarray) -> dict:
+def atomic_save_npy(
+    path: pathlib.Path, arr: np.ndarray, fault: str | None = None
+) -> dict:
     """Atomic np.save — the shared-store write primitive: concurrent
     duplicate writers (lease-steal races) replace each other with
     identical bytes instead of interleaving.  Returns write stats
-    ({bytes, fsync_s}) so instrumented callers (TileWriter) can emit
-    them without re-measuring."""
+    ({bytes, fsync_s, crc32}) so instrumented callers (TileWriter) can
+    record the content checksum without a second pass — the crc is
+    accumulated WHILE np.save streams through the temp file.
+
+    ``fault`` arms ``<fault>_pre_fsync`` / ``<fault>_pre_rename``
+    (e.g. fault="tile" -> the ISSUE's ``tile_pre_rename`` point)."""
     tmp = _unique_tmp(path)
-    with open(tmp, "wb") as f:
-        np.save(f, arr)
-        f.flush()
-        t0 = time.perf_counter()
-        os.fsync(f.fileno())
-        fsync_s = time.perf_counter() - t0
+    try:
+        with open(tmp, "wb") as f:
+            tee = Crc32(f)
+            np.save(tee, arr)
+            f.flush()
+            if fault is not None:
+                faultpoints.fire(f"{fault}_pre_fsync")
+            t0 = time.perf_counter()
+            os.fsync(f.fileno())
+            fsync_s = time.perf_counter() - t0
+    except OSError as e:
+        raise _classify_write_error(e, path, tmp) from e
+    if fault is not None:
+        faultpoints.fire(f"{fault}_pre_rename")
     os.replace(tmp, path)
     _fsync_dir(path.parent)
-    return {"bytes": int(arr.nbytes), "fsync_s": fsync_s}
+    return {"bytes": int(arr.nbytes), "fsync_s": fsync_s, "crc32": tee.hex}
+
+
+def save_npy_checksummed(
+    path: pathlib.Path, arr: np.ndarray, fault: str | None = None
+) -> dict:
+    """atomic_save_npy + ``<path>.crc32`` sidecar, for standalone .npy
+    artifacts with no manifest to carry their checksum (dataset,
+    col_order, phase-1 outputs, edges).  Sidecar lands AFTER the data —
+    a crash between the two leaves a verifiable-later gap ("unverified"
+    in fsck), never a false mismatch, because rewrites are idempotent."""
+    stats = atomic_save_npy(path, arr, fault=fault)
+    write_sidecar(path, stats["crc32"])
+    return stats
 
 
 def save_meta(
@@ -92,7 +162,7 @@ def save_dataset(path: str | pathlib.Path, ts: np.ndarray, meta: dict | None = N
     p.mkdir(parents=True, exist_ok=True)
     # Atomic: a driver killed mid-save must not leave a torn data.npy
     # that a later existence check (fleet resume) would trust.
-    atomic_save_npy(p / "data.npy", ts)
+    save_npy_checksummed(p / "data.npy", ts, fault="dataset")
     save_meta(p, ts.shape, ts.dtype, meta)
 
 
@@ -167,8 +237,11 @@ class TileWriter:
         )
         # _own: entries THIS writer commits (its manifest shard's content);
         # done: the merged all-shards view used for coverage and assembly.
+        # A torn/corrupt own shard degrades to {} — its tiles resurface
+        # as uncovered and are recomputed (fsck reports it eagerly).
         self._own: dict[str, object] = (
-            json.loads(self.manifest.read_text()) if self.manifest.exists() else {}
+            read_manifest_shard(self.manifest) or {}
+            if self.manifest.exists() else {}
         )
         self.done: dict[str, object] = {}
         self.refresh()
@@ -188,27 +261,35 @@ class TileWriter:
         in-memory entries of THIS writer are kept."""
         merged: dict[str, object] = {}
         for p in self._manifest_shards():
-            try:
-                merged.update(json.loads(p.read_text()))
-            except ValueError:
-                # a shard torn by a foreign non-atomic writer: ignore —
-                # its tiles resurface as uncovered and are recomputed
+            parsed = read_manifest_shard(p)
+            if parsed is None:
+                # a shard torn by a foreign non-atomic writer (or failing
+                # its __crc__ self-checksum): ignore — its tiles resurface
+                # as uncovered and are recomputed; fsck reports it eagerly
                 continue
+            merged.update(parsed)
         merged.update(self._own)
         self.done = merged
         return self
 
     # ------------------------------------------------------------ coverage
     def _blocks(self):
-        """Yield (row0, col0, nrows, ncols) for every manifest entry."""
+        """Yield (tiled, row0, col0, nrows, ncols, crc|None) per manifest
+        entry.  Entry formats (all readable forever): tiles ``[nr, nc]``
+        (legacy) or ``[nr, nc, crc]``; full-width row blocks ``nrows``
+        (legacy) or ``[nrows, crc]``."""
         for key, val in self.done.items():
             if "," in key:
                 row0, col0 = (int(s) for s in key.split(","))
                 nr, nc = int(val[0]), int(val[1])
-            else:  # legacy full-width row block: {row0: nrows}
-                row0, col0 = int(key), 0
-                nr, nc = int(val), self.M
-            yield row0, col0, nr, nc
+                crc = val[2] if len(val) > 2 else None
+                yield True, row0, col0, nr, nc, crc
+            else:
+                if isinstance(val, list):
+                    nr, crc = int(val[0]), val[1]
+                else:
+                    nr, crc = int(val), None
+                yield False, int(key), 0, nr, self.M, crc
 
     def covered(self) -> np.ndarray:
         """(N,) bool: rows whose tiles union to the full column width.
@@ -222,7 +303,7 @@ class TileWriter:
         O(N x tiles)."""
         cov = np.zeros(self.N, bool)
         spans: dict[tuple[int, int], list[tuple[int, int]]] = {}
-        for row0, col0, nr, nc in self._blocks():
+        for _tiled, row0, col0, nr, nc, _crc in self._blocks():
             if col0 == 0 and nc >= self.M:  # full-width fast path
                 cov[row0 : row0 + nr] = True
             else:
@@ -288,7 +369,8 @@ class TileWriter:
         # workers' entries into this shard).
         with telemetry.span(self.stage, "manifest_commit",
                             entries=len(self._own)):
-            atomic_write_text(self.manifest, json.dumps(self._own))
+            atomic_write_text(self.manifest, manifest_with_crc(self._own),
+                              fault="manifest")
 
     def ensure_col_order(self, order: np.ndarray | None) -> None:
         """Declare (and persist) the on-disk column permutation for tile
@@ -318,16 +400,18 @@ class TileWriter:
         # Atomic replace: concurrent fleet workers race this benignly —
         # both derive the same permutation from the shared phase-1 optE,
         # so whoever lands second replaces identical bytes.
-        atomic_save_npy(f, want)
+        save_npy_checksummed(f, want, fault="col_order")
         self._col_order = want
 
     def write_block(self, row0: int, rho_rows: np.ndarray):
         """Full-width row block (legacy single-tile path)."""
         rho_rows = rho_rows[: max(0, self.N - row0)]
         with telemetry.span(self.stage, "write_block", row0=row0) as t:
-            t.update(atomic_save_npy(self.dir / f"rows_{row0:08d}.npy",
-                                     rho_rows))
-        self.done[str(row0)] = self._own[str(row0)] = int(rho_rows.shape[0])
+            stats = atomic_save_npy(self.dir / f"rows_{row0:08d}.npy",
+                                    rho_rows, fault="tile")
+            t.update(stats)
+        entry = [int(rho_rows.shape[0]), stats["crc32"]]
+        self.done[str(row0)] = self._own[str(row0)] = entry
         self._commit()
 
     def write_tile(self, row0: int, col0: int, block: np.ndarray,
@@ -344,10 +428,12 @@ class TileWriter:
         block = block[: max(0, self.N - row0), : max(0, self.M - col0)]
         with telemetry.span(self.stage, "write_tile", row0=row0,
                             col0=col0) as t:
-            t.update(atomic_save_npy(
-                self.dir / f"tile_{row0:08d}_{col0:08d}.npy", block
-            ))
-        entry = [int(block.shape[0]), int(block.shape[1])]
+            stats = atomic_save_npy(
+                self.dir / f"tile_{row0:08d}_{col0:08d}.npy", block,
+                fault="tile",
+            )
+            t.update(stats)
+        entry = [int(block.shape[0]), int(block.shape[1]), stats["crc32"]]
         self.done[f"{row0},{col0}"] = self._own[f"{row0},{col0}"] = entry
         if commit:
             self._commit()
@@ -363,6 +449,13 @@ class TileWriter:
         mmap_path=None allocates a dense host array (small N only);
         otherwise the map is assembled straight into a .npy memmap at that
         path — peak host memory stays O(block), the paper-scale path.
+
+        This is the store's lazy READ-side integrity check: every block
+        with a recorded checksum is verified against its bytes before it
+        enters the map (a bit-rotted or truncated tile raises
+        IntegrityError instead of silently poisoning downstream
+        significance).  The assembled memmap gets its own .crc32 sidecar
+        so fsck can verify the end product too.
         """
         if mmap_path is None:
             rho = np.zeros((self.N, self.M), np.float32)
@@ -373,20 +466,26 @@ class TileWriter:
                 p, mode="w+", dtype=np.float32, shape=(self.N, self.M)
             )
         colmap = self._col_order
-        for key, val in self.done.items():
-            if "," in key:
-                row0, col0 = (int(s) for s in key.split(","))
-                block = np.load(self.dir / f"tile_{row0:08d}_{col0:08d}.npy")
-            else:
-                row0, col0 = int(key), 0
-                block = np.load(self.dir / f"rows_{row0:08d}.npy")[:, : self.M]
+        for tiled, row0, col0, _nr, _nc, crc in self._blocks():
+            f = (self.dir / f"tile_{row0:08d}_{col0:08d}.npy" if tiled
+                 else self.dir / f"rows_{row0:08d}.npy")
+            if crc is not None and checksum_file(f) != crc:
+                raise IntegrityError(
+                    f"{f}: content does not match the manifest checksum "
+                    f"{crc} — the store is corrupt; run "
+                    "`edm_fleet fsck --heal` and rerun to recompute it"
+                )
+            block = np.load(f)
+            if not tiled:
+                block = block[:, : self.M]
             nr, nc = block.shape
-            if "," in key and colmap is not None:
+            if tiled and colmap is not None:
                 rho[row0 : row0 + nr, colmap[col0 : col0 + nc]] = block
             else:
                 rho[row0 : row0 + nr, col0 : col0 + nc] = block
         if mmap_path is not None:
             rho.flush()
+            write_sidecar(p, checksum_file(p))
         return rho
 
 

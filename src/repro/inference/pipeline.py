@@ -346,6 +346,13 @@ def run_significance(
 
     # ---- outputs: streaming writers or (small-N) dense host maps -------
     if out_dir is not None:
+        from repro.runtime import integrity
+
+        # Same stamp-or-verify as run_causal_inference: sig params are
+        # pinned separately below, the fingerprint pins (data, cfg).
+        integrity.stamp_fingerprint(
+            out_dir, integrity.fingerprint_of(np.asarray(ts, np.float32), cfg)
+        )
         _check_resume_config(out_dir, sig)
         conv_w = _writer(out_dir, "rho_conv", N, order) if do_conv else None
         trend_w = _writer(out_dir, "rho_trend", N, order) if do_conv else None
@@ -514,7 +521,7 @@ def _finalize_store_inner(
         store.save_meta(pv_w.dir, pv_map.shape, pv_map.dtype, sig_meta)
         edir = pv_w.dir.parent / "edges"
         edir.mkdir(parents=True, exist_ok=True)
-        store.atomic_save_npy(edir / "data.npy", edges)
+        store.save_npy_checksummed(edir / "data.npy", edges, fault="edges")
         store.save_meta(
             edir, edges.shape, edges.dtype.str,
             {**sig_meta, "n_edges": int(edges.shape[0]),

@@ -52,7 +52,7 @@ from repro.core.types import EDMConfig
 from repro.data import store
 from repro.data.store import TileWriter
 from repro.inference import SignificanceConfig
-from repro.runtime import telemetry
+from repro.runtime import faultpoints, integrity, telemetry
 from repro.runtime.workqueue import LeaseQueue, WorkUnit, plan_units
 
 SPEC_NAME = "fleet.json"
@@ -84,6 +84,14 @@ def init_fleet(
         unit_rows = len(jax.devices()) * cfg.lib_block
     if seed is None:
         seed = 0 if sig is None else sig.seed
+    # Run fingerprint: dataset CONTENT (not path — the same path can hold
+    # different bytes tomorrow) + canonicalized config.  In the spec it
+    # rides the existing resume equality check; workers re-derive it from
+    # the bytes they actually loaded at join time.
+    # float32 canonicalization matches what workers compute over, so the
+    # two sides always hash the same bytes regardless of storage dtype.
+    ts = np.asarray(store.load_dataset(dataset), np.float32)
+    fp = integrity.fingerprint_of(ts, cfg)
     spec = {
         "dataset": str(pathlib.Path(dataset).resolve()),
         "N": N,
@@ -92,6 +100,8 @@ def init_fleet(
         "seed": int(seed),
         "cfg": dataclasses.asdict(cfg),
         "sig": None if sig is None else dataclasses.asdict(sig),
+        "dataset_crc32": fp["dataset_crc32"],
+        "fingerprint": fp["fingerprint"],
     }
     # JSON round-trip so the resume equality check compares like with
     # like (tuples become lists exactly as they will when read back).
@@ -106,6 +116,7 @@ def init_fleet(
             )
         return have
     store.atomic_write_text(existing, json.dumps(spec, indent=1))
+    integrity.stamp_fingerprint(out, fp)
     return spec
 
 
@@ -185,6 +196,20 @@ class FleetWorker:
             raise ValueError(
                 f"dataset shape {self.ts.shape} != fleet spec {want}"
             )
+        # Worker-join fingerprint check: the bytes THIS worker just
+        # loaded must be the bytes the fleet was initialised on, or its
+        # tiles would silently mix with everyone else's (DESIGN.md SS12).
+        want_fp = spec.get("fingerprint")
+        if want_fp is not None:
+            have = integrity.fingerprint_of(self.ts, self.cfg)
+            if have["fingerprint"] != want_fp:
+                raise integrity.IntegrityError(
+                    f"worker {worker_id}: run fingerprint "
+                    f"{have['fingerprint']} (dataset crc "
+                    f"{have['dataset_crc32']}) != fleet spec {want_fp} — "
+                    f"the dataset at {spec['dataset']} changed since "
+                    "init_fleet; use a fresh --out dir"
+                )
         self.worker_id = worker_id
         self.queue = LeaseQueue(self.out / "queue", worker_id, ttl=ttl,
                                 poll=poll, fail_limit=unit_retries)
@@ -198,6 +223,13 @@ class FleetWorker:
     def _log(self, msg: str) -> None:
         if self.progress:
             print(f"[{self.worker_id}] {msg}", flush=True)
+
+    def _renew_chunk(self, unit: WorkUnit) -> None:
+        """Per-chunk keepalive: the ``chunk_pre`` fault point (chaos
+        schedules inject errors/delays between chunks here) followed by
+        the lease renewal that keeps a slow-but-alive unit unstolen."""
+        faultpoints.fire("chunk_pre")
+        self.queue.renew(unit)
 
     # -------------------------------------------------------- stage fns
     def _phase1(self) -> np.ndarray:
@@ -216,9 +248,9 @@ class FleetWorker:
             # below + pollers), so it must land LAST: a kill between
             # these writes then leaves an unwitnessed stage that gets
             # recomputed, never a witnessed stage missing artifacts.
-            store.atomic_save_npy(p1 / "simplex_rho.npy", rhos)
+            store.save_npy_checksummed(p1 / "simplex_rho.npy", rhos)
             store.save_meta(p1, optE.shape, optE.dtype, {"stat": "optE"})
-            store.atomic_save_npy(p1 / "optE.npy", optE)
+            store.save_npy_checksummed(p1 / "optE.npy", optE)
 
         self.queue.run_stage(
             plan_units("phase1", self.N, self.unit_rows), compute,
@@ -238,15 +270,15 @@ class FleetWorker:
 
         def compute(unit):
             self._log(f"phase2 rows {unit.row0}..{unit.row0 + unit.nrows}")
-            # One call per sub-chunk so multi-chunk units (elastic
-            # unit_rows from a bigger mesh) renew their lease between
-            # chunks instead of silently outliving the TTL.
-            for sub in _sub_chunks(unit, self.chunk):
-                self.queue.renew(unit)
-                run_phase2_chunks(
-                    self.ts, ts_fut, optE, self.cfg, self.mesh, [sub],
-                    writer=writer,
-                )
+            # Per-chunk lease renewal INSIDE the streaming loop: a unit
+            # whose compute (first-touch Pallas compile, a straggler
+            # chunk) outlives the TTL re-stamps its clock between chunks
+            # instead of being stolen mid-flight.
+            run_phase2_chunks(
+                self.ts, ts_fut, optE, self.cfg, self.mesh,
+                _sub_chunks(unit, self.chunk), writer=writer,
+                on_chunk=lambda row0: self._renew_chunk(unit),
+            )
 
         # Coverage snapshot ONCE per stage entry (refresh + covered walk
         # every manifest shard — O(tiles), not something to redo per
@@ -322,9 +354,8 @@ class FleetWorker:
 
         def compute(unit):
             self._log(f"sig rows {unit.row0}..{unit.row0 + unit.nrows}")
-            renew = lambda row0: self.queue.renew(unit)
             runner.run(_sub_chunks(unit, self.chunk), rho, drain,
-                       on_chunk=renew)
+                       on_chunk=lambda row0: self._renew_chunk(unit))
             for w in writers:
                 w.commit()
 
@@ -524,6 +555,8 @@ _FLAGS_EPILOG = """\
 commands:
   work (default)      claim and compute units until the run completes
   status              render live lease/coverage/telemetry state and exit
+  fsck                verify every store artifact against its recorded
+                      checksum (masterless, from files alone) and exit
 
 flags (work):
   --out DIR           shared fleet store holding fleet.json   [required]
@@ -539,9 +572,20 @@ flags (status):
   --expect-complete   exit 1 unless all stages done AND every
                       artifact at 100% row coverage
 
+flags (fsck):
+  --out DIR           store to verify                         [required]
+  --json              machine-readable fsck report
+  --heal              revoke damaged tiles' manifest entries + queue done
+                      markers so one normal fleet pass recomputes exactly
+                      the damaged units (refused on a stale fingerprint:
+                      wrong INPUTS cannot be healed, only recomputed)
+  --expect-clean      exit 1 unless the store verifies clean
+
 environment:
   EDM_TELEMETRY       off | stdout | jsonl:<path>; unset -> per-worker
                       JSONL at <out>/telemetry/<worker-id>.jsonl
+  EDM_FAULTS          fault-injection spec (runtime/faultpoints.py), e.g.
+                      tile_pre_rename:crash@3 — testing only
 """
 
 
@@ -552,9 +596,10 @@ def main(argv=None) -> None:
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
     ap.add_argument("cmd", nargs="?", default="work",
-                    choices=["work", "status"],
+                    choices=["work", "status", "fsck"],
                     help="work: run a fleet worker (default); status: "
-                    "render live fleet state for --out and exit")
+                    "render live fleet state for --out and exit; fsck: "
+                    "verify store integrity (optionally --heal) and exit")
     ap.add_argument("--out", required=True,
                     help="shared fleet store (must hold fleet.json; see "
                     "edm_run --workers or init_fleet)")
@@ -576,12 +621,25 @@ def main(argv=None) -> None:
     ap.add_argument("--expect-complete", action="store_true",
                     help="status: exit 1 unless every stage is done and "
                     "every artifact reports 100%% row coverage")
+    ap.add_argument("--heal", action="store_true",
+                    help="fsck: revoke damaged coverage + done markers so "
+                    "a normal fleet pass recomputes exactly what was lost")
+    ap.add_argument("--expect-clean", action="store_true",
+                    help="fsck: exit 1 unless the store verifies clean")
     args = ap.parse_args(argv)
 
     if args.cmd == "status":
         st = fleet_status(args.out)
         print(json.dumps(st, indent=1) if args.json else render_status(st))
         if args.expect_complete and not st["complete"]:
+            sys.exit(1)
+        return
+
+    if args.cmd == "fsck":
+        report = integrity.fsck_store(args.out, heal=args.heal)
+        print(json.dumps(report, indent=1) if args.json
+              else integrity.render_fsck(report))
+        if args.expect_clean and not report["clean"]:
             sys.exit(1)
         return
 

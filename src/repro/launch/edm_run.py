@@ -186,6 +186,11 @@ flag groups:
                  main.jsonl; EDM_TELEMETRY=off|stdout|jsonl:<path>
                  overrides); `edm_fleet status --out DIR` renders a
                  store's live state
+  integrity      every store artifact is checksummed at write time and
+                 the run fingerprint (dataset content + config) is
+                 stamped into <out>; `edm_fleet fsck --out DIR [--heal]`
+                 verifies a store and revokes damaged units for
+                 recompute (DESIGN.md SS12)
   autotuning     --autotune --tune-from (recorded-timing tuner ->
                  <out>/tuned.json; DESIGN.md SS11)
 """

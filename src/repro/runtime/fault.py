@@ -13,19 +13,25 @@ import logging
 import time
 from typing import Any, Callable, Optional
 
+from repro.runtime import telemetry
+
 log = logging.getLogger("repro.runtime")
 
 
 @dataclasses.dataclass
 class StepTelemetry:
     """EMA-based straggler detector: a step slower than `threshold` x the
-    EMA is logged (on hardware, it would also be exported to monitoring)."""
+    EMA is flagged — logged AND emitted as a ``straggler`` counter through
+    the runtime/telemetry spine, so stragglers land in the same sinks
+    (JSONL, fleet status) as every other fleet signal instead of living
+    on a parallel log-only path."""
 
     ema: float = 0.0
     alpha: float = 0.1
     threshold: float = 3.0
     n_stragglers: int = 0
     n_steps: int = 0
+    stage: str = "engine"
 
     def record(self, dt: float) -> bool:
         self.n_steps += 1
@@ -33,6 +39,8 @@ class StepTelemetry:
         if is_straggler:
             self.n_stragglers += 1
             log.warning("straggler step: %.3fs vs EMA %.3fs", dt, self.ema)
+            telemetry.counter(self.stage, "straggler", dt_s=dt,
+                              ema_s=self.ema, step=self.n_steps)
         self.ema = dt if self.ema == 0 else (1 - self.alpha) * self.ema + self.alpha * dt
         return is_straggler
 
@@ -79,6 +87,9 @@ class ResilientLoop:
             except Exception as e:  # noqa: BLE001 — the whole point
                 retries += 1
                 log.error("step %d failed (%s); retry %d/%d", step, e, retries, self.max_retries)
+                telemetry.counter("engine", "step_retry", step=step,
+                                  retry=retries, max_retries=self.max_retries,
+                                  error=repr(e)[:200])
                 if retries > self.max_retries:
                     raise
                 restored = self.ckpt.restore_latest(state, shardings)

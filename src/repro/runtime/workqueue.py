@@ -39,8 +39,20 @@ import time
 # owned by the store — queue files and store files share the same
 # "SIGKILL can never tear shared state" contract, so they must share
 # the same implementation.
-from repro.data.store import _unique_tmp, atomic_write_text
-from repro.runtime import telemetry
+from repro.data.store import FATAL_WRITE_ERRNOS, _unique_tmp, atomic_write_text
+from repro.runtime import faultpoints, telemetry
+
+
+def _fatal_oserror(e: BaseException) -> bool:
+    """True for environment failures where retrying the unit elsewhere is
+    pointless and poisons faster than burning the budget: the shared
+    store's disk is full / quota'd / read-only (every worker writes the
+    SAME filesystem, so the next attempt fails identically)."""
+    while e is not None:
+        if isinstance(e, OSError) and e.errno in FATAL_WRITE_ERRNOS:
+            return True
+        e = e.__cause__ or e.__context__
+    return False
 
 _STAGELESS = ("phase1", "assemble", "finalize")  # one unit per run
 
@@ -228,6 +240,7 @@ class LeaseQueue:
             )
         # Steal by token-stamped replace; the readback arbitrates racing
         # stealers (at most one sees its own token as the survivor).
+        faultpoints.fire("lease_pre_steal")
         atomic_write_text(path, json.dumps(payload))
         back = self._read(path)
         if back is None or back.get("token") != payload["token"]:
@@ -284,9 +297,11 @@ class LeaseQueue:
         """Durable completion marker.  Call ONLY after the store writes
         the unit certifies are committed (the marker is what lets other
         workers skip the unit forever)."""
+        faultpoints.fire("done_pre_mark")
         atomic_write_text(
             self._done(unit),
             json.dumps({"worker": self.worker, "t": time.time()}),
+            fault="done",
         )
         telemetry.counter(
             unit.kind, "done", uid=unit.uid, row0=unit.row0,
@@ -299,13 +314,18 @@ class LeaseQueue:
             pass
 
     # ---------------------------------------------------- bounded retries
-    def record_failure(self, unit: WorkUnit, error: str) -> int:
+    def record_failure(self, unit: WorkUnit, error: str,
+                       fatal: bool = False) -> int:
         """Durably count one failed compute attempt of ``unit``; returns
         the total attempt count.  At ``fail_limit`` attempts the unit is
         POISONED (a durable ``.poison`` marker): every worker's
         run_stage raises :class:`UnitFailedError` on observing it, so a
         unit that crashes every claimer drains the fleet with a clear
         verdict instead of cycling through TTL steals forever.
+
+        ``fatal=True`` (non-retryable environment failure, e.g. the
+        shared store's disk is full — see :func:`_fatal_oserror`) poisons
+        immediately: the error is one every retry would repeat.
 
         The count is a read-modify-write over an atomic file: racing
         workers may undercount one attempt, which only ever grants a
@@ -322,16 +342,17 @@ class LeaseQueue:
         )
         telemetry.counter(
             unit.kind, "unit_failed", uid=unit.uid, attempts=attempts,
-            error=error[:200],
+            error=error[:200], fatal=fatal,
         )
-        if attempts >= self.fail_limit:
+        if fatal or attempts >= self.fail_limit:
             atomic_write_text(
                 self._poison(unit),
                 json.dumps({"uid": unit.uid, "attempts": attempts,
-                            "worker": self.worker, "error": error[:500]}),
+                            "worker": self.worker, "error": error[:500],
+                            "fatal": fatal}),
             )
             telemetry.counter(unit.kind, "unit_poisoned", uid=unit.uid,
-                              attempts=attempts)
+                              attempts=attempts, fatal=fatal)
         self.release(unit)
         return attempts
 
@@ -389,13 +410,18 @@ class LeaseQueue:
             unit = self.claim_next(units)
             if unit is not None:
                 try:
+                    faultpoints.fire("unit_pre_compute")
                     compute(unit)
+                    # The window the done-marker ordering protects: store
+                    # bytes durable, completion not yet certified.
+                    faultpoints.fire("unit_post_compute")
                 except (KeyboardInterrupt, SystemExit):
                     self.release(unit)
                     raise
                 except Exception as e:  # noqa: BLE001 - counted + rethrown at limit
-                    attempts = self.record_failure(unit, repr(e))
-                    if attempts >= self.fail_limit:
+                    fatal = _fatal_oserror(e)
+                    attempts = self.record_failure(unit, repr(e), fatal=fatal)
+                    if fatal or attempts >= self.fail_limit:
                         raise UnitFailedError(unit.uid, attempts,
                                               repr(e)) from e
                     continue

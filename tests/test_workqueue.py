@@ -4,6 +4,7 @@ writer_id-sharded TileWriter manifests, crash-mid-tile recovery, and the
 fleet-style significance path (sharded writers + finalize recount) being
 byte-identical to the single-process driver."""
 import concurrent.futures
+import errno
 import json
 import threading
 import time
@@ -184,6 +185,56 @@ def test_run_stage_reclaims_crashed_holder_after_expiry(tmp_path):
     assert q.run_stage(units, lambda u: None, timeout=10) == 1
 
 
+def test_slow_but_alive_worker_keeps_lease_via_renew(tmp_path):
+    """The fleet's per-chunk keepalive (FleetWorker._renew_chunk): a
+    compute whose total time outlives the TTL, but which renews between
+    chunks, is never stolen — while a dead holder (no renews) still is."""
+    u = plan_units("phase2", 4, 4)[0]
+    qa = LeaseQueue(tmp_path, "a", ttl=0.3)
+    qb = LeaseQueue(tmp_path, "b", ttl=0.3)
+    assert qa.try_claim(u)
+    for _ in range(4):  # 0.6s of "compute" >> ttl, renewed per chunk
+        time.sleep(0.15)
+        assert qa.renew(u)
+        assert not qb.try_claim(u)
+    qa.mark_done(u)
+    # contrast: a holder that stops renewing (crashed) is stolen
+    u2 = plan_units("sig", 4, 4)[0]
+    assert qa.try_claim(u2)
+    time.sleep(0.4)
+    assert qb.try_claim(u2)
+
+
+def test_disk_full_poisons_immediately_not_retried(tmp_path):
+    """ENOSPC-class failures are environment verdicts, not flaky units:
+    one attempt, immediate poison with the 'out of space' error, no
+    retry-budget burn (every retry would hit the same full disk)."""
+    units = plan_units("phase2", 4, 4)
+    q = LeaseQueue(tmp_path, "a", ttl=60, poll=0.01, fail_limit=3)
+
+    def compute(u):
+        raise OSError(errno.ENOSPC, f"out of space at {tmp_path}/tile")
+
+    with pytest.raises(UnitFailedError) as ei:
+        q.run_stage(units, compute, timeout=10)
+    assert ei.value.attempts == 1  # poisoned on the FIRST attempt
+    info = json.loads((tmp_path / f"{units[0].uid}.poison").read_text())
+    assert info["fatal"] and "out of space" in info["error"]
+    # a chained fatal errno (the store wraps and re-raises) also counts
+    u2 = plan_units("sig", 4, 4)[0]
+
+    def compute2(u):
+        try:
+            raise OSError(errno.EDQUOT, "quota")
+        except OSError as e:
+            raise RuntimeError("tile write failed") from e
+
+    q2 = LeaseQueue(tmp_path, "b", ttl=60, poll=0.01, fail_limit=3)
+    with pytest.raises(UnitFailedError):
+        q2.run_stage([u2], compute2, timeout=10)
+    assert json.loads((tmp_path / f"{u2.uid}.poison").read_text())["fatal"]
+
+
 # --------------------------------------------------------- bounded retries
 def test_flaky_unit_retried_then_succeeds(tmp_path):
     """A transiently-failing compute is a counted attempt, not instant
@@ -279,8 +330,10 @@ def test_tile_writer_sharded_manifests_merge(tmp_path):
     wa.write_block(0, rho[:4])
     wb.write_block(4, rho[4:])
     # each worker committed only its own shard — no lock, no lost update
-    assert set(json.loads((tmp_path / "w" / "blocks.wa.json").read_text())) == {"0"}
-    assert set(json.loads((tmp_path / "w" / "blocks.wb.json").read_text())) == {"4"}
+    assert set(json.loads(
+        (tmp_path / "w" / "blocks.wa.json").read_text())) == {"__crc__", "0"}
+    assert set(json.loads(
+        (tmp_path / "w" / "blocks.wb.json").read_text())) == {"__crc__", "4"}
     # a's in-memory view predates b's commit; refresh merges it in
     assert not wa.covered().all()
     assert wa.refresh().covered().all()
@@ -327,14 +380,43 @@ def test_tile_writer_duplicate_tiles_identical_content_benign(tmp_path):
 
 def test_legacy_single_writer_layout_unchanged(tmp_path):
     """writer_id=None keeps the PR 2-4 on-disk layout: one blocks.json,
-    same keys — old stores resume under the new code."""
+    same keys — old stores resume under the new code.  Entries now carry
+    a content crc and the shard a __crc__ self-checksum (DESIGN.md SS12)."""
     N = 4
     w = TileWriter(tmp_path / "w", N)
     w.write_block(0, np.zeros((4, N), np.float32))
     files = {p.name for p in (tmp_path / "w").iterdir()}
     assert "blocks.json" in files
-    assert not any(f.startswith("blocks.") and f != "blocks.json" for f in files)
-    assert json.loads((tmp_path / "w" / "blocks.json").read_text()) == {"0": 4}
+    assert not any(
+        f.startswith("blocks.") and f != "blocks.json"
+        for f in files if not f.endswith(".crc32")
+    )
+    man = json.loads((tmp_path / "w" / "blocks.json").read_text())
+    assert set(man) == {"__crc__", "0"}
+    nrows, crc = man["0"]
+    assert nrows == 4 and len(crc) == 8
+
+
+def test_legacy_manifest_without_checksums_still_resumes(tmp_path):
+    """A pre-integrity store (bare-int block entries, [nr, nc] tiles, no
+    __crc__) must keep loading: coverage, chunk_plan, and assemble all
+    work, with verification simply skipped for legacy entries."""
+    N = 4
+    d = tmp_path / "w"
+    d.mkdir()
+    w = TileWriter(d, N)
+    w.write_block(0, np.arange(2 * N, dtype=np.float32).reshape(2, N))
+    w.write_tile(2, 0, np.zeros((2, 2), np.float32), commit=False)
+    w.write_tile(2, 2, np.zeros((2, 2), np.float32))
+    # rewrite the manifest the way PR 5 wrote it: no crcs, no __crc__
+    (d / "blocks.json").write_text(
+        json.dumps({"0": 2, "2,0": [2, 2], "2,2": [2, 2]})
+    )
+    r = TileWriter(d, N)
+    assert r.covered().all()
+    out = r.assemble()
+    assert out.shape == (N, N)
+    np.testing.assert_array_equal(out[:2], np.arange(2 * N).reshape(2, N))
 
 
 # ------------------------------- fleet-style significance, crash + recount
