@@ -502,4 +502,10 @@ def run_causal_inference(
             rho = writer.assemble(
                 mmap_path=writer.dir / "causal_map" / "data.npy"
             )
+        # In-process finalize path: record the run summary into the
+        # history store (no-op with telemetry off and EDM_HISTORY unset;
+        # a later significance finalize REPLACES it — same run identity).
+        from repro.runtime import history
+
+        history.record_run(out_dir)
     return CausalMap(rho=rho, optE=optE, simplex_rho=simplex_rhos)

@@ -49,7 +49,7 @@ from repro.data import store
 from repro.data.store import TileWriter
 from repro.inference import convergence, significance, surrogates
 from repro.inference.types import SignificanceConfig, SignificanceResult
-from repro.runtime import telemetry
+from repro.runtime import history, telemetry
 from repro.runtime.stream import ChunkStreamer
 
 
@@ -413,10 +413,14 @@ def run_significance(
         # Chunks already durable from a prior run never re-drained, so
         # their p-value counts are recovered from the assembled map
         # (p_counts=None -> recount inside the finalizer).
-        return _finalize_store(
+        result = _finalize_store(
             cfg, sig, rho, conv_w=conv_w, trend_w=trend_w, pv_w=pv_w,
             p_counts=None if resumed_rows else p_counts, progress=progress,
         )
+        # Run finished: append its summary to the run history (no-op
+        # when telemetry is off and EDM_HISTORY unset; DESIGN.md SS13).
+        history.record_run(out_dir)
+        return result
 
     p_threshold, edges = 0.0, None
     n_tests = int(p_counts.sum())
@@ -564,10 +568,15 @@ def finalize_significance(
                 f"{w.dir} is incomplete ({int((~w.covered()).sum())} rows "
                 "uncovered): finalize ran before every sig unit was done"
             )
-    return _finalize_store(
+    result = _finalize_store(
         cfg, sig, rho, conv_w=conv_w, trend_w=trend_w, pv_w=pv_w,
         p_counts=None, progress=progress,
     )
+    # The finalize claimer is the run's single history writer: one
+    # summary record per finished run, replaced (not duplicated) when an
+    # elastic resume or heal re-finalizes (DESIGN.md SS13).
+    history.record_run(out_dir)
+    return result
 
 
 def _recount_pvals(pv_map: np.ndarray, m: int) -> tuple[int, np.ndarray]:

@@ -52,7 +52,7 @@ from repro.core.types import EDMConfig
 from repro.data import store
 from repro.data.store import TileWriter
 from repro.inference import SignificanceConfig
-from repro.runtime import faultpoints, integrity, telemetry
+from repro.runtime import faultpoints, history, integrity, telemetry, trace
 from repro.runtime.workqueue import LeaseQueue, WorkUnit, plan_units
 
 SPEC_NAME = "fleet.json"
@@ -319,6 +319,11 @@ class FleetWorker:
                     "fleet": True,
                 },
             )
+            # Run-history summary (DESIGN.md SS13): for a no-significance
+            # fleet assemble IS finalize; a later sig finalize REPLACES
+            # this record (same run identity).  Only the assemble claimer
+            # writes — single history writer per run.
+            history.record_run(self.out)
 
         self.queue.run_stage(
             plan_units("assemble", self.N, self.unit_rows), compute,
@@ -392,6 +397,9 @@ class FleetWorker:
         record) and flushed at the stage boundary, bounding what a
         SIGKILL can lose to one stage's unflushed tail."""
         t0 = time.time()
+        # Run-start clock anchor: (epoch, monotonic) sample the trace
+        # assembler aligns this worker's timeline on (DESIGN.md SS13).
+        telemetry.emit_clock_anchor(worker_id=self.worker_id)
         with telemetry.span("phase1", "stage"):
             optE = self._phase1()
         telemetry.flush()
@@ -551,12 +559,88 @@ def render_status(st: dict) -> str:
     return "\n".join(lines)
 
 
+def watch_status(
+    out_dir: str | pathlib.Path,
+    interval: float = 2.0,
+    iterations: int | None = None,
+    file=None,
+) -> dict:
+    """``status --watch``: re-render fleet state every ``interval``
+    seconds until the run completes, adding what a single snapshot
+    cannot show —
+
+      * per-stage throughput (units done/s) and row-coverage rate with
+        an ETA, both from deltas between refreshes;
+      * STRAGGLER flags on live leases whose age exceeds the fleet's
+        p95 unit hold time (the recorded ``held`` counters — a unit
+        held longer than 95% of completed holds is statistically late,
+        long before its TTL expires).
+
+    ``iterations`` bounds the loop for tests/CI; returns the last
+    status dict.  Pure reader — same files-only observability as
+    :func:`fleet_status`, no worker RPC.
+    """
+    f = file or sys.stdout
+    prev_t: float | None = None
+    prev_cov: dict[str, int] = {}
+    prev_done: dict[str, int] = {}
+    n = 0
+    while True:
+        st = fleet_status(out_dir)
+        now = time.time()
+        lines = [render_status(st)]
+        if prev_t is not None:
+            dt = max(now - prev_t, 1e-6)
+            for kind, s in st["stages"].items():
+                d = s["done"] - prev_done.get(kind, s["done"])
+                if d > 0 and s["done"] < s["total"]:
+                    rate = d / dt
+                    eta = (s["total"] - s["done"]) / rate
+                    lines.append(f"watch: {kind} {rate:.2f} units/s, "
+                                 f"ETA {eta:.0f}s")
+            for name, c in st["coverage"].items():
+                d = c["covered"] - prev_cov.get(name, c["covered"])
+                if d > 0 and c["covered"] < c["total"]:
+                    rate = d / dt
+                    eta = (c["total"] - c["covered"]) / rate
+                    lines.append(f"watch: {name} {rate:.1f} rows/s, "
+                                 f"ETA {eta:.0f}s")
+        held = trace.held_percentiles(out_dir)
+        p95 = held.get("p95")
+        if p95:
+            for kind, s in st["stages"].items():
+                for l in s["leases"]:
+                    if l["age_s"] > p95:
+                        lines.append(
+                            f"watch: STRAGGLER {l['uid']}@{l['worker']} "
+                            f"held {l['age_s']}s > fleet p95 {p95:.1f}s"
+                            + (" (lease EXPIRED)" if l["expired"] else ""))
+        print("\n".join(lines), file=f, flush=True)
+        prev_t = now
+        prev_cov = {k: c["covered"] for k, c in st["coverage"].items()}
+        prev_done = {k: s["done"] for k, s in st["stages"].items()}
+        n += 1
+        if st["complete"] or (iterations is not None and n >= iterations):
+            return st
+        time.sleep(interval)
+
+
 _FLAGS_EPILOG = """\
 commands:
   work (default)      claim and compute units until the run completes
   status              render live lease/coverage/telemetry state and exit
   fsck                verify every store artifact against its recorded
                       checksum (masterless, from files alone) and exit
+  trace               assemble the fleet-wide causal trace from recorded
+                      telemetry: unit lifecycles, clock-skew-aligned
+                      timelines, critical path through the stage DAG,
+                      wall-time buckets (compute / gather / store /
+                      queue-wait / straggler-tail); writes Chrome
+                      trace-event JSON loadable in Perfetto
+  trends              render the cross-run history (one summary record
+                      appended per finished run): regression flags vs
+                      the previous same-fingerprint run and a
+                      knob-vs-throughput table
 
 flags (work):
   --out DIR           shared fleet store holding fleet.json   [required]
@@ -571,6 +655,10 @@ flags (status):
   --json              machine-readable status dict
   --expect-complete   exit 1 unless all stages done AND every
                       artifact at 100% row coverage
+  --watch             re-render every --interval seconds until complete,
+                      with per-stage throughput, ETA, and STRAGGLER
+                      flags on leases older than the fleet p95 hold time
+  --interval SEC      --watch refresh period                  [2]
 
 flags (fsck):
   --out DIR           store to verify                         [required]
@@ -581,9 +669,25 @@ flags (fsck):
                       wrong INPUTS cannot be healed, only recomputed)
   --expect-clean      exit 1 unless the store verifies clean
 
+flags (trace):
+  --out DIR           fleet store whose telemetry to assemble [required]
+  --trace-out FILE    Chrome trace JSON path     [<out>/trace.json]
+  --json              machine-readable trace analysis (units, stages,
+                      buckets, critical path) instead of the one-pager
+  --reconcile         exit 1 unless per-stage span totals match
+                      `status` within 1% (CI gate)
+
+flags (trends):
+  --history FILE      history JSONL to render [<out>/history.jsonl or
+                      $EDM_HISTORY; --out optional when given]
+  --json              machine-readable trends analysis
+
 environment:
   EDM_TELEMETRY       off | stdout | jsonl:<path>; unset -> per-worker
                       JSONL at <out>/telemetry/<worker-id>.jsonl
+  EDM_HISTORY         shared run-history JSONL (default:
+                      <out>/history.jsonl; one summary record appended
+                      per finished run, same-run reruns replace theirs)
   EDM_FAULTS          fault-injection spec (runtime/faultpoints.py), e.g.
                       tile_pre_rename:crash@3 — testing only
 """
@@ -596,13 +700,16 @@ def main(argv=None) -> None:
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
     ap.add_argument("cmd", nargs="?", default="work",
-                    choices=["work", "status", "fsck"],
+                    choices=["work", "status", "fsck", "trace", "trends"],
                     help="work: run a fleet worker (default); status: "
                     "render live fleet state for --out and exit; fsck: "
-                    "verify store integrity (optionally --heal) and exit")
-    ap.add_argument("--out", required=True,
+                    "verify store integrity (optionally --heal) and exit; "
+                    "trace: assemble the fleet causal trace + Chrome "
+                    "trace JSON; trends: render the cross-run history")
+    ap.add_argument("--out",
                     help="shared fleet store (must hold fleet.json; see "
-                    "edm_run --workers or init_fleet)")
+                    "edm_run --workers or init_fleet); required for every "
+                    "command except `trends --history FILE`")
     ap.add_argument("--worker-id",
                     help="stable queue identity; relaunching a killed "
                     "worker under the SAME id reclaims its leases instantly")
@@ -626,13 +733,68 @@ def main(argv=None) -> None:
                     "a normal fleet pass recomputes exactly what was lost")
     ap.add_argument("--expect-clean", action="store_true",
                     help="fsck: exit 1 unless the store verifies clean")
+    ap.add_argument("--watch", action="store_true",
+                    help="status: re-render every --interval seconds until "
+                    "the run completes, with throughput, ETA, and "
+                    "straggler flags (lease age > fleet p95 hold time)")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="status --watch refresh period in seconds")
+    ap.add_argument("--trace-out",
+                    help="trace: Chrome trace-event JSON destination "
+                    "(default <out>/trace.json; load in Perfetto)")
+    ap.add_argument("--reconcile", action="store_true",
+                    help="trace: exit 1 unless per-stage span totals "
+                    "reconcile with `status` within 1%%")
+    ap.add_argument("--history",
+                    help="trends: history JSONL to render (default "
+                    "$EDM_HISTORY or <out>/history.jsonl)")
     args = ap.parse_args(argv)
+    if args.out is None and not (args.cmd == "trends" and args.history):
+        ap.error(f"{args.cmd} requires --out")
 
     if args.cmd == "status":
+        if args.watch:
+            watch_status(args.out, interval=args.interval)
+            return
         st = fleet_status(args.out)
         print(json.dumps(st, indent=1) if args.json else render_status(st))
         if args.expect_complete and not st["complete"]:
             sys.exit(1)
+        return
+
+    if args.cmd == "trace":
+        tr = trace.assemble_trace(args.out)
+        dest = pathlib.Path(args.trace_out) if args.trace_out \
+            else pathlib.Path(args.out) / "trace.json"
+        trace.write_chrome_trace(args.out, dest)
+        rep = trace.reconcile(tr, fleet_status(args.out)) \
+            if args.reconcile else None
+        if args.json:
+            print(json.dumps(
+                {**tr, "reconcile": rep} if rep else tr, indent=1))
+        else:
+            print(trace.render_trace(tr))
+            print(f"chrome trace: {dest} (load in Perfetto / "
+                  "chrome://tracing)")
+            if rep is not None:
+                for stage, s in sorted(rep["stages"].items()):
+                    print(f"reconcile {stage}: trace {s['trace_s']}s vs "
+                          f"status {s['status_s']}s "
+                          f"(delta {s['delta_pct']}%)")
+        if rep is not None and not rep["ok"]:
+            sys.exit(1)
+        return
+
+    if args.cmd == "trends":
+        hp = pathlib.Path(args.history) if args.history \
+            else history.history_path(args.out)
+        recs = history.load_history(hp)
+        if args.json:
+            print(json.dumps(
+                {"path": str(hp), **history.analyze_trends(recs)}, indent=1))
+        else:
+            print(f"history: {hp}")
+            print(history.render_trends(recs))
         return
 
     if args.cmd == "fsck":

@@ -48,7 +48,7 @@ from repro.data import store
 from repro.data.synthetic import dummy_brain
 from repro.engine import available_engines
 from repro.inference import SignificanceConfig, run_significance
-from repro.runtime import autotune, telemetry
+from repro.runtime import autotune, history, telemetry
 
 
 def _run_fleet(args, ts, cfg, sig):
@@ -91,7 +91,10 @@ def _run_fleet(args, ts, cfg, sig):
     t0 = time.time()
 
     def spawn(wid):
+        # tuned_ttl: schedule knob from --autotune (lease expiry sized
+        # to the measured hold-time tail); None -> worker default.
         return edm_fleet.spawn_worker(out, wid,
+                                      ttl=getattr(args, "tuned_ttl", None),
                                       unit_retries=args.unit_retries)
 
     procs = {f"w{i}": spawn(f"w{i}") for i in range(args.workers)}
@@ -184,15 +187,22 @@ flag groups:
                  --max-worker-restarts
   observability  --no-telemetry (default sink: <out>/telemetry/
                  main.jsonl; EDM_TELEMETRY=off|stdout|jsonl:<path>
-                 overrides); `edm_fleet status --out DIR` renders a
-                 store's live state
+                 overrides); `edm_fleet status --out DIR [--watch]`
+                 renders a store's live state; `edm_fleet trace` the
+                 assembled causal trace + Chrome trace JSON; `edm_fleet
+                 trends` the cross-run history (one summary appended
+                 per finished run to <out>/history.jsonl or
+                 $EDM_HISTORY; DESIGN.md SS13)
   integrity      every store artifact is checksummed at write time and
                  the run fingerprint (dataset content + config) is
                  stamped into <out>; `edm_fleet fsck --out DIR [--heal]`
                  verifies a store and revokes damaged units for
                  recompute (DESIGN.md SS12)
   autotuning     --autotune --tune-from (recorded-timing tuner ->
-                 <out>/tuned.json; DESIGN.md SS11)
+                 <out>/tuned.json; geometry knobs + schedule knobs:
+                 lease ttl applied to spawned workers, worker count
+                 recommended, stream depth from drain gather share;
+                 DESIGN.md SS11/SS13)
 """
 
 
@@ -343,12 +353,27 @@ def main():
             import jax
 
             cfg = autotune.apply_to_cfg(cfg, tuned, len(jax.devices()))
-            print(f"autotune: applied {tuned['recommend']} from {src}")
+            rec = tuned["recommend"]
+            # Schedule knobs (DESIGN.md SS13): the tuned lease TTL is
+            # applied to the workers this driver spawns; the worker
+            # count is a budget decision, so it is RECOMMENDED, never
+            # silently applied.
+            if rec.get("ttl"):
+                args.tuned_ttl = float(rec["ttl"])
+            if rec.get("workers") and args.workers > 0 \
+                    and rec["workers"] != args.workers:
+                print(f"autotune: recommend --workers {rec['workers']} "
+                      f"(this run uses {args.workers}; straggler-tail "
+                      "model, see tuned.json evidence)")
+            print(f"autotune: applied {rec} from {src}")
         elif args.tune_from:
             raise SystemExit(
                 f"--tune-from {src}: no tuned.json and no chunk telemetry "
                 "to replay"
             )
+    # Run-start clock anchor (runtime/trace.py aligns timelines on it),
+    # then the run's config snapshot.
+    telemetry.emit_clock_anchor(driver=True, workers=args.workers)
     telemetry.counter(
         "fleet", "run_config", engine=cfg.engine, lib_block=cfg.lib_block,
         target_tile=cfg.target_tile, knn_tile_c=cfg.knn_tile_c,
@@ -367,6 +392,10 @@ def main():
     if args.workers > 0:
         try:
             _run_fleet(args, ts, cfg, sig)
+            # Refresh the run-history record the finalize claimer wrote
+            # so it also covers the driver's own telemetry tail (same
+            # run identity -> replaces, never duplicates).
+            history.record_run(args.out)
         finally:
             telemetry.shutdown()
         _autotune_epilogue(args)
@@ -409,6 +438,7 @@ def main():
               + (f"; {len(out.edges)} edges at FDR {args.fdr} "
                  f"(p* = {out.p_threshold:.4g}, {out.n_tests} tests)"
                  if out.edges is not None else ""))
+    history.record_run(args.out)  # run-history summary (DESIGN.md SS13)
     telemetry.shutdown()  # flush the run's JSONL before any replay
     _autotune_epilogue(args)
 

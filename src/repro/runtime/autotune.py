@@ -37,6 +37,32 @@ Decision rules (documented in DESIGN.md SS11):
                  "knn_tile" counter), so the next run skips calibration
                  and keeps the same kernel shapes across restarts.
 
+Schedule knobs (DESIGN.md SS13; evidence comes from the lease queue's
+held-time counters and the streamer's drain spans — ISSUE "Autotune
+beyond geometry"):
+
+  ttl          — lease expiry sized from the MEASURED hold-time tail:
+                 TTL_SAFETY x held p95, clamped to [TTL_MIN, TTL_MAX].
+                 A TTL far above real hold times parks crashed units
+                 for minutes; far below it triggers spurious steals of
+                 slow-but-alive workers.
+  workers      — straggler-tail share model: with W workers a stage's
+                 tail is ~ one unit hold (the barrier waits on the last
+                 unit), so tail share ≈ p95 / (busy/W + p95).  Pick the
+                 largest W keeping that share under TAIL_TARGET:
+                 W = busy_total x TAIL_TARGET / (p95 x (1-TAIL_TARGET)).
+  stream_depth — drain overlap: gather_share = (time the drain spent
+                 blocked on device gathers) / (chunk compute time).
+                 Above GATHER_HI the device is finishing ahead of the
+                 host pipeline -> one more chunk in flight; below
+                 GATHER_LO at depth > 2 the extra buffer is dead weight
+                 -> shrink.  Clamped to [1, DEPTH_MAX].
+
+Geometry knobs land in the EDMConfig (apply_to_cfg); schedule knobs are
+applied by the DRIVER (edm_run spawns workers with the tuned ttl and
+prints the worker recommendation — worker count is the user's budget
+call, never silently changed).
+
 Every recommendation carries its evidence (the aggregates it was
 derived from) in tuned.json, so a recommendation is auditable and a
 rerun under different hardware visibly re-derives different shapes.
@@ -61,6 +87,16 @@ WRITE_RATIO_LO = 0.025
 TILE_MIN = 16
 CHUNK_ROWS_MIN = 8
 
+#: schedule-knob bands (module docstring; DESIGN.md SS13).
+TTL_SAFETY = 4.0
+TTL_MIN = 60.0
+TTL_MAX = 3600.0
+TAIL_TARGET = 0.2
+WORKERS_MAX = 64
+GATHER_HI = 0.15
+GATHER_LO = 0.02
+DEPTH_MAX = 4
+
 
 def _pow2_at_most(n: int) -> int:
     p = 1
@@ -79,12 +115,34 @@ def replay(out_dir: str | pathlib.Path) -> dict:
         "write_s": 0.0, "writes": 0, "write_bytes": 0,
         "knn_tile": {},  # Lc -> calibrated width
         "records": 0, "N": 0,
+        # schedule-knob evidence
+        "held": [],          # unit hold durations (done + stolen + released)
+        "gather_s": 0.0,     # drain time blocked on device gathers
+        "busy_by_worker": {},  # worker file -> chunk-span seconds
+        "rec_depth": 0,      # stream depth the run actually ran
+        "rec_workers": 0,    # worker count the run actually ran
     }
-    for _, rec in telemetry.iter_store_records(out_dir):
+    for stem, rec in telemetry.iter_store_records(out_dir):
         agg["records"] += 1
         stage, name = rec.get("stage"), rec.get("name")
         attrs = rec.get("attrs") or {}
+        if name == "held" and rec.get("kind") == "counter":
+            agg["held"].append(float(rec.get("value", 0.0)))
+        elif name == "drain" and "dur_s" in rec:
+            agg["gather_s"] += float(attrs.get("gather_s", 0.0))
+            if attrs.get("depth"):
+                agg["rec_depth"] = max(agg["rec_depth"], int(attrs["depth"]))
+        elif name == "run_config":
+            if attrs.get("stream_depth"):
+                agg["rec_depth"] = max(agg["rec_depth"],
+                                       int(attrs["stream_depth"]))
+            if attrs.get("workers"):
+                agg["rec_workers"] = max(agg["rec_workers"],
+                                         int(attrs["workers"]))
         if name == "chunk" and stage in ("phase2", "sig"):
+            agg["busy_by_worker"][stem] = (
+                agg["busy_by_worker"].get(stem, 0.0) + rec.get("dur_s", 0.0)
+            )
             agg["chunk_s"] += rec.get("dur_s", 0.0)
             agg["chunk_rows_done"] += int(attrs.get("rows", 0))
             agg["chunks"] += 1
@@ -150,14 +208,43 @@ def recommend(out_dir: str | pathlib.Path) -> dict | None:
         lc = max(agg["knn_tile"])
         rec["knn_tile_c"] = agg["knn_tile"][lc]
 
-    evidence = {k: v for k, v in agg.items() if k != "knn_tile"}
+    # ---- schedule knobs (module docstring; DESIGN.md SS13) -------------
+    held = sorted(agg["held"])
+    held_p95 = held[min(len(held) - 1, int(0.95 * (len(held) - 1)))] \
+        if held else None
+    if held_p95 is not None and held_p95 > 0:
+        rec["ttl"] = round(
+            min(TTL_MAX, max(TTL_MIN, TTL_SAFETY * held_p95)), 1)
+        busy_total = sum(agg["busy_by_worker"].values())
+        if busy_total > 0:
+            w = busy_total * TAIL_TARGET / (held_p95 * (1.0 - TAIL_TARGET))
+            rec["workers"] = int(min(WORKERS_MAX, max(1, w)))
+        rec["held_p95_s"] = round(held_p95, 4)
+    depth = agg["rec_depth"]
+    if depth and agg["chunk_s"] > 0:
+        gather_share = agg["gather_s"] / agg["chunk_s"]
+        if gather_share > GATHER_HI:
+            depth += 1
+        elif gather_share < GATHER_LO and depth > 2:
+            depth -= 1
+        rec["stream_depth"] = int(min(DEPTH_MAX, max(1, depth)))
+        rec["gather_share"] = round(gather_share, 4)
+
+    evidence = {k: v for k, v in agg.items()
+                if k not in ("knn_tile", "held")}
     evidence["knn_tile"] = {str(k): v for k, v in agg["knn_tile"].items()}
+    evidence["held_n"] = len(held)
+    evidence["held_p95_s"] = held_p95
+    for k in ("held_p95_s", "gather_share"):
+        if k in rec:
+            evidence[k] = rec.pop(k)
     return {
         "v": TUNED_VERSION,
         "from": str(pathlib.Path(out_dir)),
         "recommend": {
             k: rec[k]
-            for k in ("chunk_rows", "target_tile", "knn_tile_c")
+            for k in ("chunk_rows", "target_tile", "knn_tile_c",
+                      "stream_depth", "ttl", "workers")
             if k in rec
         },
         "evidence": evidence,
@@ -192,7 +279,9 @@ def load_tuned(out_dir: str | pathlib.Path) -> dict | None:
 def apply_to_cfg(cfg, tuned: dict, n_devices: int):
     """EDMConfig with the tuned shapes stamped in (byte-identity makes
     any of them safe to apply): chunk_rows -> lib_block (per-device row
-    share), target_tile and knn_tile_c verbatim."""
+    share), target_tile / knn_tile_c / stream_depth verbatim.  The
+    remaining schedule knobs (ttl, workers) are process-level, not
+    config-level — the driver applies/prints them (see edm_run)."""
     rec = tuned["recommend"]
     fields = {}
     if rec.get("chunk_rows"):
@@ -201,6 +290,8 @@ def apply_to_cfg(cfg, tuned: dict, n_devices: int):
         fields["target_tile"] = int(rec["target_tile"])
     if rec.get("knn_tile_c"):
         fields["knn_tile_c"] = int(rec["knn_tile_c"])
+    if rec.get("stream_depth"):
+        fields["stream_depth"] = int(rec["stream_depth"])
     return dataclasses.replace(cfg, **fields) if fields else cfg
 
 

@@ -67,7 +67,8 @@ class ChunkStreamer:
     def _drain_one(self) -> None:
         tag, dev = self._pending.popleft()
         with telemetry.span(self.stage, "drain",
-                            tag=repr(tag), in_flight=len(self._pending)) as t:
+                            tag=repr(tag), in_flight=len(self._pending),
+                            depth=self.depth) as t:
             t0 = _perf()
             host = np.asarray(dev)  # blocks: compute + D2H copy
             t["gather_s"] = _perf() - t0

@@ -38,15 +38,28 @@ by tests and ``edm_fleet status``):
   name     str     record name within the stage (e.g. "chunk",
                    "claim", "write_tile", "knn_tile")
   t        float   epoch seconds at emit (span: at exit)
+  mono     float   CLOCK_MONOTONIC seconds at emit — the skew/NTP-step
+                   immune sibling of ``t`` that runtime/trace.py aligns
+                   cross-worker timelines on (extra field; schema-v1
+                   validators ignore it)
   dur_s    float   span wall time (spans only)
   value    float   counter value (counters only)
   worker   str     emitting identity (worker id or "main")
   pid      int     emitting process
   seq      int     per-process monotonic sequence number
   attrs    dict    free-form JSON-safe details (row0, bytes, lease age…)
+
+Loss window: the JSONL sink batches ``flush_every`` records per atomic
+rewrite, so a SIGKILL can lose at most the records since the last
+flush.  The queue flushes at every UNIT boundary (done/failure — see
+runtime/workqueue.py) and the fleet at every STAGE boundary, bounding
+the loss to the current unit's in-progress tail; an exit hook
+(:mod:`atexit`, registered at configure time) flushes on every
+non-SIGKILL death so only a hard kill can lose even that.
 """
 from __future__ import annotations
 
+import atexit
 import contextlib
 import json
 import os
@@ -66,6 +79,7 @@ _lock = threading.Lock()
 _sinks: list["Sink"] = []
 _worker = "main"
 _seq = 0
+_atexit_registered = False
 
 
 # ------------------------------------------------------------------- sinks
@@ -173,7 +187,7 @@ def configure(*sinks: Sink, worker: str | None = None) -> None:
     """Install the process's sink list (replacing any previous ones) and
     optionally its emitting identity.  ``configure()`` with no sinks
     disables telemetry."""
-    global _sinks
+    global _sinks, _atexit_registered
     with _lock:
         for s in _sinks:
             try:
@@ -183,6 +197,13 @@ def configure(*sinks: Sink, worker: str | None = None) -> None:
         _sinks = list(sinks)
         if worker is not None:
             set_identity(worker)
+        if _sinks and not _atexit_registered:
+            # Last-chance flush on any non-SIGKILL exit (normal return,
+            # sys.exit, unhandled exception): the batched JSONL tail is
+            # lost only to a hard kill, and even that loss is bounded by
+            # the unit-boundary flushes (see module docstring).
+            atexit.register(flush)
+            _atexit_registered = True
 
 
 def configure_from_env(
@@ -238,6 +259,7 @@ def _emit(kind: str, stage: str, name: str, *, dur_s=None, value=None,
             "stage": stage,
             "name": name,
             "t": time.time(),
+            "mono": time.monotonic(),
             "worker": _worker,
             "pid": os.getpid(),
             "seq": _seq,
@@ -255,6 +277,20 @@ def counter(stage: str, name: str, value: float = 1.0, **attrs) -> None:
     """Point event: queue claims/steals/dones, bytes written, cache
     entries, calibration results…"""
     _emit("counter", stage, name, value=value, attrs=attrs)
+
+
+def emit_clock_anchor(**attrs) -> None:
+    """One explicit (epoch, monotonic) clock sample at run/worker start.
+
+    Every record already carries both clocks (``t`` + ``mono``); the
+    anchor marks the RUN START on both scales so runtime/trace.py can
+    align workers on their monotonic clocks (immune to NTP steps
+    mid-run) and detect cross-host epoch skew against the queue's
+    causal order.  Emitted by the fleet worker and the edm_run driver,
+    never implicitly by :func:`configure` (tests install sinks freely
+    and count records)."""
+    counter("fleet", "clock_anchor",
+            epoch=time.time(), mono=time.monotonic(), **attrs)
 
 
 @contextlib.contextmanager

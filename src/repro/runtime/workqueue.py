@@ -238,6 +238,16 @@ class LeaseQueue:
                 uid=unit.uid,
                 prev_worker=None if held is None else held.get("worker"),
             )
+            # The stolen-from holder can never report its own hold time
+            # (it is dead or wedged) — the stealer records the observed
+            # terminal hold on its behalf, so hold-time histograms (TTL
+            # tuning, straggler attribution; DESIGN.md SS13) see steals
+            # too, not just clean completions.
+            telemetry.counter(
+                unit.kind, "held", lease_age, uid=unit.uid,
+                outcome="stolen",
+                prev_worker=None if held is None else held.get("worker"),
+            )
         # Steal by token-stamped replace; the readback arbitrates racing
         # stealers (at most one sees its own token as the survivor).
         faultpoints.fire("lease_pre_steal")
@@ -288,6 +298,12 @@ class LeaseQueue:
         """Give a claimed-but-uncomputed unit back (graceful shutdown)."""
         held = self._read(self._lease(unit))
         if held is not None and held.get("worker") == self.worker:
+            if unit.uid in self._claim_t:
+                telemetry.counter(
+                    unit.kind, "held",
+                    time.time() - self._claim_t.pop(unit.uid),
+                    uid=unit.uid, outcome="release",
+                )
             try:
                 self._lease(unit).unlink()
             except OSError:
@@ -296,17 +312,27 @@ class LeaseQueue:
     def mark_done(self, unit: WorkUnit) -> None:
         """Durable completion marker.  Call ONLY after the store writes
         the unit certifies are committed (the marker is what lets other
-        workers skip the unit forever)."""
+        workers skip the unit forever).
+
+        Telemetry ORDER matters here: the done + held records are
+        emitted and FLUSHED before the marker lands, so a durable done
+        marker always implies its writer's records for the unit are
+        durable too — the loss-window bound (a SIGKILL between flush and
+        marker merely recomputes the unit, and duplicate done records
+        are deduped at trace time)."""
+        held_s = time.time() - self._claim_t.pop(unit.uid, time.time())
+        telemetry.counter(
+            unit.kind, "done", uid=unit.uid, row0=unit.row0,
+            nrows=unit.nrows, held_s=held_s,
+        )
+        telemetry.counter(unit.kind, "held", held_s, uid=unit.uid,
+                          outcome="done")
+        telemetry.flush()  # unit boundary: make the unit's tail durable
         faultpoints.fire("done_pre_mark")
         atomic_write_text(
             self._done(unit),
             json.dumps({"worker": self.worker, "t": time.time()}),
             fault="done",
-        )
-        telemetry.counter(
-            unit.kind, "done", uid=unit.uid, row0=unit.row0,
-            nrows=unit.nrows,
-            held_s=time.time() - self._claim_t.pop(unit.uid, time.time()),
         )
         try:
             self._lease(unit).unlink()
@@ -354,6 +380,7 @@ class LeaseQueue:
             telemetry.counter(unit.kind, "unit_poisoned", uid=unit.uid,
                               attempts=attempts, fatal=fatal)
         self.release(unit)
+        telemetry.flush()  # unit boundary (failure): bound the loss window
         return attempts
 
     def poisoned(self, units: list[WorkUnit]) -> dict | None:

@@ -99,6 +99,8 @@ def _spawn(out, wid, jax_cache, fault=None):
     env = dict(os.environ, JAX_COMPILATION_CACHE_DIR=jax_cache,
                JAX_PLATFORMS="cpu")
     env.pop("EDM_FAULTS", None)
+    env.pop("EDM_TELEMETRY", None)  # default-on JSONL: the loss-window
+    # bound below is asserted against the recorded telemetry
     if fault is not None:
         env["EDM_FAULTS"] = fault
     return edm_fleet.spawn_worker(out, wid, env=env)
@@ -196,6 +198,24 @@ def _assert_matches(out, baseline):
         )
 
 
+def _assert_done_markers_covered(out):
+    """Every durable ``queue/*.done`` marker names its writer; that
+    worker's telemetry JSONL must contain the matching done counter
+    (mark_done's flush-before-marker ordering makes this an invariant,
+    not a best effort)."""
+    from repro.runtime import telemetry
+
+    for marker in sorted((out / "queue").glob("*.done")):
+        uid = marker.name[: -len(".done")]
+        writer = json.loads(marker.read_text())["worker"]
+        recs = telemetry.read_jsonl(telemetry.worker_jsonl(out, writer))
+        assert any(
+            r.get("kind") == "counter" and r.get("name") == "done"
+            and r.get("attrs", {}).get("uid") == uid
+            for r in recs
+        ), f"done marker {uid} has no durable done record from {writer}"
+
+
 @pytest.mark.parametrize("seed", range(N_SCHEDULES))
 def test_chaos_schedule_converges_byte_identical(
     baseline, jax_cache, tmp_path, seed
@@ -210,6 +230,11 @@ def test_chaos_schedule_converges_byte_identical(
     # 2. the surviving store verifies clean, crash residue and all
     rep = integrity.fsck_store(out)
     assert rep["clean"], json.dumps(rep, indent=1)
+    # 2b. telemetry loss-window bound: mark_done flushes the unit's done
+    # record BEFORE the durable marker lands, so — even across injected
+    # SIGKILLs — every surviving done marker implies its writer's
+    # telemetry for that unit survived too (DESIGN.md SS13)
+    _assert_done_markers_covered(out)
 
     # 3. post-hoc corruption: detect -> heal -> one pass -> identical
     if schedule["corruption"] != "none":

@@ -1,0 +1,502 @@
+"""Fleet trace assembly + run history + schedule autotune (DESIGN.md
+SS13): unit-lifecycle reconstruction from recorded telemetry, clock-skew
+alignment, critical path + wall-time buckets, Chrome trace-event export,
+the crash-safe run-history store with trends rendering, the three
+schedule-knob decision rules, and `status --watch` straggler flags.
+
+Everything here runs on SYNTHETIC telemetry fixtures (handwritten JSONL
+records with known timings) — the trace layer replays records, it never
+needs a live pipeline, so the tests pin exact expected numbers.
+"""
+import io
+import json
+import threading
+import time
+
+import pytest
+
+from repro.runtime import autotune, history, telemetry, trace
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    telemetry.shutdown()
+    telemetry.set_identity("main")
+    yield
+    telemetry.shutdown()
+    telemetry.set_identity("main")
+
+
+# ------------------------------------------------------------- fixtures
+def _write_worker(out, worker, records, pid=1, mono_offset=900.0):
+    """One worker's JSONL: fills schema boilerplate, derives ``mono``
+    from ``t`` minus the worker's epoch-mono offset (a real worker's
+    monotonic clock has an arbitrary zero)."""
+    p = telemetry.worker_jsonl(out, worker)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    lines = []
+    for i, r in enumerate(records):
+        rec = {"v": 1, "worker": worker, "pid": pid, "seq": i + 1,
+               "attrs": {}, **r}
+        rec.setdefault("mono", rec["t"] - mono_offset)
+        lines.append(json.dumps(rec) + "\n")
+    with open(p, "a") as f:
+        f.writelines(lines)
+    return p
+
+
+def _span(stage, name, end, dur, **attrs):
+    return {"kind": "span", "stage": stage, "name": name, "t": end,
+            "dur_s": dur, "attrs": attrs}
+
+
+def _ctr(stage, name, t, value=1.0, **attrs):
+    return {"kind": "counter", "stage": stage, "name": name, "t": t,
+            "value": value, "attrs": attrs}
+
+
+U0, U1 = "phase2_00000000_00008", "phase2_00000008_00008"
+
+
+def _two_worker_store(out, w1_skew=0.0, w1_mono_offset=None):
+    """The recorded 2-worker fixture: two phase-2 units (one per worker,
+    w1's the straggler) and an assemble unit claimed by w1 after the
+    barrier.  ``w1_skew`` shifts every w1 EPOCH stamp (its mono stays
+    truthful relative to its own epoch) — the clock-skew scenario."""
+    _write_worker(out, "w0", [
+        _ctr("phase2", "claim", 1000.0, uid=U0, row0=0, nrows=8,
+             lease_age_s=0.0),
+        _span("phase2", "chunk", 1010.0, 10.0, row0=0, rows=8,
+              chunk_rows=8, gather_s=1.0),
+        _span("store", "write_tile", 1010.5, 0.5, row0=0, col0=0,
+              bytes=100),
+        _ctr("phase2", "done", 1011.0, uid=U0, row0=0, nrows=8,
+             held_s=11.0),
+        _ctr("phase2", "held", 1011.0, value=11.0, uid=U0, outcome="done"),
+        _span("phase2", "stage", 1012.0, 12.5),
+    ], pid=10)
+    s = w1_skew
+    off = 900.0 if w1_mono_offset is None else w1_mono_offset
+    _write_worker(out, "w1", [
+        _ctr("phase2", "claim", 1000.5 + s, uid=U1, row0=8, nrows=8,
+             lease_age_s=0.0),
+        _span("phase2", "chunk", 1015.0 + s, 14.0, row0=8, rows=8,
+              chunk_rows=8, gather_s=2.0),
+        _ctr("phase2", "done", 1015.5 + s, uid=U1, row0=8, nrows=8,
+             held_s=15.0),
+        _ctr("phase2", "held", 1015.5 + s, value=15.0, uid=U1,
+             outcome="done"),
+        _span("phase2", "stage", 1016.0 + s, 16.2),
+        # assemble happens strictly AFTER the phase-2 barrier drained
+        _ctr("assemble", "claim", 1016.5 + s, uid="assemble", row0=0,
+             nrows=16, lease_age_s=0.0),
+        _ctr("assemble", "done", 1017.0 + s, uid="assemble", row0=0,
+             nrows=16, held_s=0.5),
+    ], pid=11, mono_offset=off)
+    return out
+
+
+# ------------------------------------------------------- trace assembly
+def test_unit_lifecycles_and_buckets(tmp_path):
+    tr = trace.assemble_trace(_two_worker_store(tmp_path))
+    assert tr["workers"] == ["w0", "w1"]
+    assert set(tr["units"]) == {U0, U1, "assemble"}
+
+    u1 = tr["units"][U1]
+    assert u1["worker"] == "w1" and u1["steals"] == 0
+    assert u1["held_s"] == 15.0 and u1["chunks"] == 1
+    assert u1["compute_s"] == pytest.approx(14.0)
+    assert u1["gather_s"] == pytest.approx(2.0)
+    u0 = tr["units"][U0]
+    assert u0["store_s"] == pytest.approx(0.5)  # write_tile joined via row0
+
+    p2 = tr["stages"]["phase2"]
+    assert p2["units"] == 2 and p2["done_units"] == 2 and p2["chunks"] == 2
+    # stage wall spans first stage-span start to last phase2 event
+    # (the store span and the assemble claim belong to other stages)
+    assert p2["start"] == pytest.approx(1012.0 - 12.5)
+    assert p2["end"] == pytest.approx(1016.0)
+    b = p2["buckets"]
+    assert b["compute"] == pytest.approx(24.0)  # both workers' chunk time
+    assert b["gather"] == pytest.approx(3.0)
+    assert b["store"] == pytest.approx(0.5)
+    # w1 finished last: w0 idles from its last busy moment to stage end
+    assert b["straggler_tail"] >= 1015.0 - 1010.5 - 0.1
+    # nearest-rank (n-1)-indexed percentiles: 2 samples -> both lower
+    assert p2["chunk_p50_s"] == 10.0 and p2["chunk_p95_s"] == 10.0
+
+    # span_totals is the `fleet status` aggregation: EVERY span dur per
+    # stage (this is the 1%-reconcile surface)
+    assert tr["span_totals"]["phase2"] == pytest.approx(10 + 14 + 12.5 + 16.2)
+    assert tr["span_totals"]["store"] == pytest.approx(0.5)
+
+    # critical path: per stage, the unit the barrier waited on
+    path = {e["stage"]: e for e in tr["critical_path"]}
+    assert list(path) == ["phase2", "assemble"]  # DAG order
+    assert path["phase2"]["uid"] == U1 and path["phase2"]["worker"] == "w1"
+    assert path["phase2"]["queue_wait_s"] == pytest.approx(1.0)  # 999.5->1000.5
+    # done at 1015.5, stage end 1016.0 (w1's own stage span close)
+    assert path["phase2"]["straggler_tail_s"] == pytest.approx(0.5)
+    assert path["assemble"]["uid"] == "assemble"
+
+    # render never throws and names the straggler unit
+    text = trace.render_trace(tr)
+    assert U1 in text and "critical path" in text
+
+
+def test_duplicate_done_records_dedupe(tmp_path):
+    """A SIGKILL between the flushed done record and the durable marker
+    recomputes the unit: w1's done record survives but no marker landed,
+    so w2 steals after the TTL, redoes the work, and emits a SECOND done.
+    The trace keeps the FIRST completion; alignment must not mistake the
+    post-crash steal for clock skew."""
+    _write_worker(tmp_path, "w0", [
+        _ctr("phase2", "claim", 1000.0, uid=U0, row0=0, nrows=8),
+        _ctr("phase2", "done", 1011.0, uid=U0, row0=0, nrows=8,
+             held_s=11.0),
+    ], pid=10)
+    _write_worker(tmp_path, "w1", [  # crashed before the marker
+        _ctr("phase2", "claim", 1000.5, uid=U1, row0=8, nrows=8),
+        _ctr("phase2", "done", 1015.5, uid=U1, row0=8, nrows=8,
+             held_s=15.0),
+    ], pid=11)
+    _write_worker(tmp_path, "w2", [
+        _ctr("phase2", "steal", 1020.0, uid=U1, row0=8, nrows=8,
+             lease_age_s=600.0),
+        _ctr("phase2", "done", 1030.0, uid=U1, row0=8, nrows=8,
+             held_s=10.0),
+        _ctr("assemble", "claim", 1031.0, uid="assemble", row0=0,
+             nrows=16),
+        _ctr("assemble", "done", 1031.5, uid="assemble", row0=0,
+             nrows=16, held_s=0.5),
+    ], pid=12)
+    tr = trace.assemble_trace(tmp_path)
+    # the steal-after-done sequence is protocol-legal, not skew
+    assert all(abs(s) < 1e-6 for s in tr["clock_shift_s"].values())
+    u = tr["units"][U1]
+    assert u["done_t"] == pytest.approx(1015.5)  # first completion wins
+    assert u["worker"] == "w1" and u["held_s"] == 15.0
+    assert u["steals"] == 1  # the steal is still part of the lifecycle
+    assert len(u["claims"]) == 2
+
+
+def test_clock_skew_alignment(tmp_path):
+    """w1's epoch clock runs 50 s behind.  Queue causality (every
+    phase-2 done precedes the assemble claim; w0's done is on the true
+    timeline) pushes w1's whole timeline forward — alignment recovers
+    the causally-required part of the skew without any clock exchange."""
+    tr = trace.assemble_trace(_two_worker_store(tmp_path, w1_skew=-50.0,
+                                                w1_mono_offset=850.0))
+    shift = tr["clock_shift_s"]
+    assert shift["w0"] == pytest.approx(0.0, abs=1e-6)
+    # w0's phase2 done at 1011 must precede w1's assemble claim (raw
+    # 966.5): the violation is 44.5 s — causal alignment recovers a
+    # LOWER BOUND of the true 50 s skew, never overshoots it
+    assert 44.0 <= shift["w1"] <= 50.0
+    # aligned DAG order is causal again: the assemble claim follows
+    # every phase-2 done (stage-span ends are not queue events, so only
+    # the done/claim ordering is guaranteed after alignment)
+    last_done = max(u["done_t"] for u in tr["units"].values()
+                    if u["stage"] == "phase2")
+    assert tr["units"]["assemble"]["claimed_t"] >= last_done - 1e-3
+    # and the skew-free fixture needs (and gets) no correction
+    tr0 = trace.assemble_trace(_two_worker_store(tmp_path / "clean"))
+    assert all(abs(s) < 1e-6 for s in tr0["clock_shift_s"].values())
+
+
+def test_ntp_step_immunity_via_mono(tmp_path):
+    """An NTP step mid-run yanks one record's epoch stamp by +500 s; the
+    median epoch-mono offset rebuilds the timeline on mono, so the
+    stepped record lands where it causally belongs."""
+    _write_worker(tmp_path, "w0", [
+        _ctr("phase2", "claim", 1000.0, uid=U0, row0=0, nrows=8),
+        # true time 1005 but epoch stepped +500; mono stays truthful
+        {**_ctr("phase2", "done", 1505.0, uid=U0, row0=0, nrows=8,
+                held_s=5.0), "mono": 105.0},
+        _span("phase2", "stage", 1006.0, 6.0),
+    ])
+    tr = trace.assemble_trace(tmp_path)
+    assert tr["units"][U0]["done_t"] == pytest.approx(1005.0)
+    assert tr["total_wall_s"] < 10.0  # not 500+
+
+
+def test_empty_store_yields_wellformed_trace(tmp_path):
+    tr = trace.assemble_trace(tmp_path)
+    assert tr["units"] == {} and tr["stages"] == {}
+    assert tr["critical_path"] == [] and tr["total_wall_s"] == 0.0
+    assert "no telemetry records" in trace.render_trace(tr)
+    ct = trace.chrome_trace(tmp_path)
+    assert ct["traceEvents"] == []
+
+
+# ---------------------------------------------------------- chrome trace
+def test_chrome_trace_golden(tmp_path):
+    """Golden export of the 2-worker fixture: valid Chrome trace-event
+    JSON (the Perfetto-loadable subset) with per-worker process rows,
+    µs timestamps from run start, and span/instant events."""
+    out = _two_worker_store(tmp_path)
+    ct = trace.chrome_trace(out)
+    evs = ct["traceEvents"]
+    assert ct["displayTimeUnit"] == "ms"
+
+    meta = [e for e in evs if e["ph"] == "M"]
+    procs = {e["args"]["name"] for e in meta if e["name"] == "process_name"}
+    assert procs == {"w0", "w1"}
+    assert all(set(e) >= {"ph", "pid", "tid", "name"} for e in evs)
+
+    xs = [e for e in evs if e["ph"] == "X"]
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert len(xs) == 5  # 2 chunk + 1 write_tile + 2 stage spans
+    assert len(inst) == 8  # claim/done/held x2 workers + assemble pair
+    # metadata first, then strictly non-decreasing timestamps
+    assert [e["ph"] for e in evs[:len(meta)]] == ["M"] * len(meta)
+    ts = [e["ts"] for e in evs[len(meta):]]
+    assert ts == sorted(ts) and all(isinstance(t, int) for t in ts)
+
+    # t0 = earliest span start = 999.5 (w0 stage span); w0's chunk span
+    # [1000, 1010] therefore sits at ts=500000 µs, dur=10 s
+    chunk = next(e for e in xs if e["name"] == "phase2.chunk"
+                 and e["args"]["row0"] == 0)
+    assert chunk["ts"] == 500000 and chunk["dur"] == 10_000_000
+    assert chunk["pid"] == 0  # w0 is the first (sorted) worker process
+    done = next(e for e in inst if e["name"] == "phase2.done"
+                and e["args"]["uid"] == U0)
+    assert done["ts"] == 11_500_000
+
+    # the written file round-trips as JSON
+    p = trace.write_chrome_trace(out, tmp_path / "trace.json")
+    assert json.loads(p.read_text())["traceEvents"]
+
+
+# --------------------------------------------------------- reconciliation
+def test_reconcile_matches_fleet_status_aggregation(tmp_path):
+    """The acceptance gate: trace span totals vs `edm_fleet status`
+    span_s — both sum every valid span's dur_s per stage, so they agree
+    to rounding; a doctored status breaks the 1% gate."""
+    out = _two_worker_store(tmp_path)
+    tr = trace.assemble_trace(out)
+    # fleet_status's aggregation, reproduced over the same records
+    per_stage = {}
+    for _, rec in telemetry.iter_store_records(out):
+        if telemetry.validate(rec) or rec["kind"] != "span":
+            continue
+        st = per_stage.setdefault(rec["stage"], {"span_s": 0.0})
+        st["span_s"] += rec["dur_s"]
+    rep = trace.reconcile(tr, {"telemetry": {"stages": per_stage}})
+    assert rep["ok"], rep
+    assert all(s["delta_pct"] <= 1.0 for s in rep["stages"].values())
+
+    per_stage["phase2"]["span_s"] *= 1.5  # drifted reader
+    rep = trace.reconcile(tr, {"telemetry": {"stages": per_stage}})
+    assert not rep["ok"]
+    assert rep["stages"]["phase2"]["delta_pct"] > 1.0
+
+
+# ------------------------------------------------------------ run history
+def test_history_build_append_replace_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.delenv("EDM_HISTORY", raising=False)
+    out = _two_worker_store(tmp_path / "run")
+    (out / "fingerprint.json").parent.mkdir(exist_ok=True)
+    (out / "fingerprint.json").write_text(json.dumps({"fingerprint": "fpA"}))
+
+    rec = history.build_record(out)
+    assert rec["v"] == history.HISTORY_VERSION
+    assert rec["fingerprint"] == "fpA" and rec["workers"] == 2
+    assert rec["chunks"] == 2 and rec["units_done"] == 3
+    assert rec["chunk_p95_s"] == 10.0  # nearest-rank over 2 samples
+    assert rec["held_p95_s"] == 11.0  # nearest-rank over [11, 15]
+    assert rec["bytes_written"] == 100
+    assert rec["rows_per_s"] == pytest.approx(16 / 24.0, rel=1e-3)
+    assert rec["stages"]["phase2"]["span_s"] == pytest.approx(52.7)
+
+    hp = tmp_path / "history.jsonl"
+    history.append_record(hp, rec)
+    history.append_record(hp, {**rec, "total_span_s": 99.0})  # same run
+    got = history.load_history(hp)
+    assert len(got) == 1  # replaced, not duplicated
+    assert got[0]["total_span_s"] == 99.0
+    other = {**rec, "out": "/elsewhere", "t": rec["t"] + 1}
+    history.append_record(hp, other)
+    assert len(history.load_history(hp)) == 2
+    # torn foreign tail is tolerated (telemetry read_jsonl semantics)
+    with open(hp, "a") as f:
+        f.write('{"v": 1, "tor')
+    assert len(history.load_history(hp)) == 2
+
+
+def test_record_run_gating_and_env_override(tmp_path, monkeypatch):
+    out = _two_worker_store(tmp_path / "run")
+    monkeypatch.delenv("EDM_HISTORY", raising=False)
+    # telemetry off + no env -> no-op: the store stays pristine
+    assert history.record_run(out) is None
+    assert not (out / "history.jsonl").exists()
+
+    shared = tmp_path / "shared_history.jsonl"
+    monkeypatch.setenv("EDM_HISTORY", str(shared))
+    p = history.record_run(out)
+    assert p == shared and len(history.load_history(shared)) == 1
+    history.record_run(out)  # same run again -> replaced
+    assert len(history.load_history(shared)) == 1
+
+    monkeypatch.delenv("EDM_HISTORY")
+    telemetry.configure(telemetry.MemorySink())
+    p = history.record_run(out)  # sink active -> default store path
+    assert p == out / "history.jsonl"
+
+
+def test_trends_rendering_and_regression_flags(tmp_path):
+    """Synthetic multi-run history: a 2x slowdown on the same
+    fingerprint is flagged; the knob table ranks geometries."""
+    base = {
+        "v": 1, "out": "/runs/a", "fingerprint": "fp1", "N": 64,
+        "engine": "reference", "workers": 2,
+        "geometry": {"target_tile": 32, "stream_depth": 2,
+                     "unit_rows": 8},
+        "steals": 0, "retries": 0, "poisoned": 0, "chunk_p95_s": 1.0,
+    }
+    recs = [
+        {**base, "t": 1000.0, "total_span_s": 10.0, "rows_per_s": 50.0},
+        {**base, "t": 2000.0, "total_span_s": 11.0, "rows_per_s": 48.0},
+        {**base, "t": 3000.0, "total_span_s": 22.0, "rows_per_s": 24.0,
+         "geometry": {"target_tile": 64, "stream_depth": 2,
+                      "unit_rows": 8}, "steals": 3},
+    ]
+    a = history.analyze_trends(recs)
+    assert a["runs"][0]["regression_pct"] is None  # nothing to compare
+    assert a["runs"][1]["regression_pct"] == pytest.approx(10.0)
+    assert a["runs"][2]["regression_pct"] == pytest.approx(100.0)
+    assert len(a["regressions"]) == 1
+    assert len(a["knobs"]) == 2  # two geometries
+    assert a["knobs"][0]["tile"] == 32  # faster geometry ranks first
+
+    text = history.render_trends(recs)
+    assert "REGRESSION +100.0%" in text
+    assert "3 steal(s)" in text
+    assert "knob vs throughput" in text
+    assert "no runs recorded" in history.render_trends([])
+
+
+# ------------------------------------------------- schedule-knob autotune
+def _synth_store(tmp_path, records):
+    import shutil
+    d = tmp_path / "synth"
+    if d.exists():
+        shutil.rmtree(d)
+    _write_worker(d, "w0", records)
+    return d
+
+
+CHUNK = _span("sig", "chunk", 1010.0, 0.0, rows=8, chunk_rows=8)
+
+
+def test_schedule_knob_ttl_rule(tmp_path):
+    """ttl = TTL_SAFETY x held p95, clamped to [TTL_MIN, TTL_MAX]."""
+    held = [_ctr("sig", "held", 1000.0 + i, value=100.0, uid=f"u{i}",
+                 outcome="done") for i in range(20)]
+    d = _synth_store(tmp_path, [{**CHUNK, "dur_s": 4.0}] + held)
+    rec = autotune.recommend(d)["recommend"]
+    assert rec["ttl"] == pytest.approx(autotune.TTL_SAFETY * 100.0)
+
+    tiny = [_ctr("sig", "held", 1000.0, value=0.5, uid="u0")]
+    d = _synth_store(tmp_path, [{**CHUNK, "dur_s": 4.0}] + tiny)
+    assert autotune.recommend(d)["recommend"]["ttl"] == autotune.TTL_MIN
+
+    # no held evidence -> no schedule recommendation (geometry only)
+    d = _synth_store(tmp_path, [{**CHUNK, "dur_s": 4.0}])
+    assert "ttl" not in autotune.recommend(d)["recommend"]
+
+
+def test_schedule_knob_workers_rule(tmp_path):
+    """Straggler-tail share model: W = busy x TAIL_TARGET /
+    (p95 x (1 - TAIL_TARGET)) — 400 s of work at p95=10 s supports 10
+    workers before the tail exceeds 20% of the schedule."""
+    chunks = [{**CHUNK, "dur_s": 40.0, "t": 1000.0 + i} for i in range(10)]
+    held = [_ctr("sig", "held", 2000.0 + i, value=10.0, uid=f"u{i}")
+            for i in range(20)]
+    d = _synth_store(tmp_path, chunks + held)
+    rec = autotune.recommend(d)["recommend"]
+    assert rec["workers"] == 10
+    assert rec["ttl"] == pytest.approx(autotune.TTL_MIN)  # 4x10 < 60 clamp
+
+    # a heavier tail (p95 40 s) over the same work -> fewer workers
+    held = [_ctr("sig", "held", 2000.0 + i, value=40.0, uid=f"u{i}")
+            for i in range(20)]
+    d = _synth_store(tmp_path, chunks + held)
+    assert autotune.recommend(d)["recommend"]["workers"] == 2
+
+
+def test_schedule_knob_stream_depth_rule(tmp_path):
+    """Drain gather share steers depth: device-bound (> GATHER_HI) grows
+    it, negligible (< GATHER_LO at depth > 2) shrinks it, mid-band
+    keeps the recorded depth; clamped to [1, DEPTH_MAX]."""
+    def with_drain(gather_s, depth, chunk_s=10.0):
+        return [
+            {**CHUNK, "dur_s": chunk_s},
+            _span("phase2", "drain", 1011.0, gather_s + 0.01,
+                  tag="(0, 8)", in_flight=0, depth=depth,
+                  gather_s=gather_s),
+        ]
+
+    d = _synth_store(tmp_path, with_drain(gather_s=2.0, depth=2))
+    assert autotune.recommend(d)["recommend"]["stream_depth"] == 3  # 20% share
+
+    d = _synth_store(tmp_path, with_drain(gather_s=0.05, depth=3))
+    assert autotune.recommend(d)["recommend"]["stream_depth"] == 2  # 0.5%
+
+    d = _synth_store(tmp_path, with_drain(gather_s=0.5, depth=2))
+    assert autotune.recommend(d)["recommend"]["stream_depth"] == 2  # 5%: keep
+
+    d = _synth_store(tmp_path, with_drain(gather_s=9.0, depth=4))
+    assert autotune.recommend(d)["recommend"]["stream_depth"] == \
+        autotune.DEPTH_MAX  # never beyond the clamp
+
+
+def test_held_percentiles_reader(tmp_path):
+    d = _synth_store(tmp_path, [
+        _ctr("phase2", "held", 1000.0 + i, value=float(i + 1), uid=f"u{i}")
+        for i in range(100)
+    ])
+    pc = trace.held_percentiles(d)
+    assert pc["n"] == 100
+    assert pc["p50"] == 50.0 and pc["p95"] == 95.0 and pc["p99"] == 99.0
+    assert trace.held_percentiles(tmp_path / "none") == {
+        "n": 0, "p50": None, "p95": None, "p99": None}
+
+
+# ------------------------------------------------------- status --watch
+def test_watch_status_stragglers_and_throughput(tmp_path):
+    """A handcrafted fleet store: one live lease far older than the
+    fleet's p95 hold time is flagged STRAGGLER; a done marker landing
+    between refreshes produces a throughput/ETA line."""
+    from repro.launch import edm_fleet
+
+    out = tmp_path / "fleet"
+    out.mkdir()
+    (out / "fleet.json").write_text(json.dumps(
+        {"N": 16, "L": 100, "unit_rows": 8, "seed": 0, "sig": None,
+         "cfg": {}}))
+    qdir = out / "queue"
+    qdir.mkdir()
+    (qdir / "phase1.done").write_text(json.dumps({"worker": "w0"}))
+    (qdir / "phase2_00000000_00008.lease").write_text(json.dumps(
+        {"worker": "w9", "t": time.time() - 30.0, "ttl": 600.0}))
+    _write_worker(out, "w0", [
+        _ctr("phase2", "held", 1000.0 + i, value=2.0, uid=f"u{i}",
+             outcome="done") for i in range(20)
+    ])
+
+    def land_done():
+        time.sleep(0.3)
+        (qdir / "phase2_00000008_00008.done").write_text(
+            json.dumps({"worker": "w0"}))
+
+    t = threading.Thread(target=land_done)
+    t.start()
+    buf = io.StringIO()
+    st = edm_fleet.watch_status(out, interval=0.6, iterations=2, file=buf)
+    t.join()
+    text = buf.getvalue()
+    assert "STRAGGLER phase2_00000000_00008@w9" in text
+    assert "fleet p95 2.0s" in text
+    assert "watch: phase2" in text and "units/s" in text and "ETA" in text
+    assert not st["complete"]

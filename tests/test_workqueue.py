@@ -522,3 +522,61 @@ def test_finalize_refuses_incomplete_store(tmp_path):
             str(tmp_path), np.ones((N, N), np.float32), EDMConfig(E_max=4),
             SignificanceConfig(lib_sizes=(), n_surrogates=4),
         )
+
+
+# ---------------------------------------------------- hold-time counters
+def test_mark_done_emits_done_and_held_counters(tmp_path):
+    """mark_done records the unit's terminal hold time twice — on the
+    done counter (joined to the unit by uid) and as a ``held`` sample
+    (the TTL-autotune / straggler-watch histogram) — and flushes both
+    BEFORE the durable marker lands (the loss-window bound)."""
+    from repro.runtime import telemetry
+
+    mem = telemetry.MemorySink()
+    telemetry.configure(mem, worker="wa")
+    try:
+        u = WorkUnit("phase2", 0, 8)
+        q = LeaseQueue(tmp_path, "wa", ttl=60)
+        assert q.try_claim(u)
+        time.sleep(0.02)
+        q.mark_done(u)
+        held = [r for r in mem.records if r["name"] == "held"]
+        assert len(held) == 1
+        assert held[0]["stage"] == "phase2"
+        assert held[0]["attrs"] == {"uid": u.uid, "outcome": "done"}
+        assert held[0]["value"] >= 0.015
+        done = [r for r in mem.records if r["name"] == "done"]
+        assert done[0]["attrs"]["held_s"] == held[0]["value"]
+    finally:
+        telemetry.shutdown()
+
+
+def test_release_and_steal_emit_held_outcomes(tmp_path):
+    """A graceful release samples the hold with outcome=release; a TTL
+    steal makes the STEALER record the victim's terminal hold
+    (outcome=stolen) — the victim is dead and cannot."""
+    from repro.runtime import telemetry
+
+    mem = telemetry.MemorySink()
+    telemetry.configure(mem, worker="a")
+    try:
+        u = WorkUnit("phase2", 0, 8)
+        qa = LeaseQueue(tmp_path, "a", ttl=0.05)
+        qb = LeaseQueue(tmp_path, "b", ttl=0.05)
+        assert qa.try_claim(u)
+        qa.release(u)
+        rel = [r for r in mem.records if r["name"] == "held"]
+        assert len(rel) == 1 and rel[0]["attrs"]["outcome"] == "release"
+
+        assert qa.try_claim(u)
+        time.sleep(0.12)  # let the lease expire; "a" is now the victim
+        assert qb.try_claim(u)
+        stolen = [r for r in mem.records
+                  if r["name"] == "held"
+                  and r["attrs"].get("outcome") == "stolen"]
+        assert len(stolen) == 1
+        assert stolen[0]["attrs"]["uid"] == u.uid
+        assert stolen[0]["attrs"]["prev_worker"] == "a"
+        assert stolen[0]["value"] >= 0.05  # at least the TTL elapsed
+    finally:
+        telemetry.shutdown()
