@@ -746,6 +746,174 @@ def roofline_summary():
         )
 
 
+# ------------------------------------------------- paper-shape scaling
+# Prior bench ceiling (fig6/fig7 topped out at 128 series x 1000 steps);
+# the scale sweep below grows N*L 100x+ past it (DESIGN.md SS14).
+PRIOR_CEILING_NL = 128 * 1000
+SCALE_CELLS = ((512, 1000), (2048, 2048), (16384, 4096))
+
+
+def scale_bench():
+    """Synthetic scaling sweep toward the paper shape -> BENCH_scale.json
+    (DESIGN.md SS14).
+
+    Per cell (N series x L steps): time the per-series streaming kNN
+    table build (the phase-1/phase-2 workhorse), the SHARDED build +
+    device-side collective merge at several candidate-shard counts, and
+    the merge alone device-vs-host — asserting sharded == unsharded
+    BYTE-identity (idx and f32 dists) at every cell, the SS14 contract.
+    N enters the recorded geometry and the extrapolations (per-series
+    costs are N-independent after the mpEDM rework — DESIGN.md SS2), so
+    the same harness runs unchanged at the paper's 100k-neuron scale on
+    a real cluster; locally the largest cell is 16384 x 4096 = 524x the
+    prior 128x1000 bench ceiling.
+
+    EDM_SCALE_SMOKE=1 (CI's scale-smoke job, 2 spoofed devices): only
+    the smallest cell and shard set — the identity gate without the
+    wall-clock bill.
+    """
+    from repro.core import knn
+    from repro.core.pipeline import (
+        default_mesh,
+        knn_tables_library_sharded,
+        knn_tables_library_sharded_sim,
+    )
+
+    smoke = os.environ.get("EDM_SCALE_SMOKE") == "1"
+    cells = SCALE_CELLS[:1] if smoke else SCALE_CELLS
+    shard_counts = (2,) if smoke else (2, 4)
+    W = len(jax.devices())
+    mesh = default_mesh()
+    out: dict = {
+        "prior_ceiling_NL": PRIOR_CEILING_NL,
+        "devices": W,
+        "smoke": smoke,
+        "cells": {},
+    }
+    for N, L in cells:
+        cfg = EDMConfig(E_max=20)
+        k = cfg.k_max
+        # One representative series' lag matrix: per-series table cost is
+        # N-independent, so one timed build extrapolates the whole brain.
+        series = jnp.asarray(dummy_brain(1, L, seed=N)[0])
+        Lp = cfg.n_points(L)
+        V = lag_matrix(series, cfg.E_max, cfg.tau, Lp)
+        tile_c = knn.resolve_stream_tile(Lp, cfg)
+        reps = 1 if N * L > 10 * PRIOR_CEILING_NL else 3
+
+        t_build = _time(
+            lambda: knn.knn_tables_all_E_streaming(
+                V, V, k, exclude_self=True, tile_c=tile_c
+            ),
+            reps=reps,
+        )
+        ref_i, ref_d = jax.block_until_ready(
+            knn.knn_tables_all_E_streaming(V, V, k, exclude_self=True,
+                                           tile_c=tile_c)
+        )
+
+        sharded: dict = {}
+        # Real-mesh collective when this process has >1 device (CI's
+        # scale-smoke spoofs 2); simulated shards cover the other counts.
+        if W > 1:
+            mi, md = jax.block_until_ready(
+                knn_tables_library_sharded(V, V, k, cfg, exclude_self=True,
+                                           mesh=mesh)
+            )
+            np.testing.assert_array_equal(np.asarray(mi), np.asarray(ref_i))
+            np.testing.assert_array_equal(np.asarray(md), np.asarray(ref_d))
+            t_mesh = _time(
+                lambda: knn_tables_library_sharded(V, V, k, cfg,
+                                                   exclude_self=True,
+                                                   mesh=mesh),
+                reps=reps,
+            )
+            sharded[f"mesh{W}"] = {"build_merge_s": t_mesh,
+                                   "identical": True, "collective": True}
+        for S in shard_counts:
+            si, sd = jax.block_until_ready(
+                knn_tables_library_sharded_sim(V, V, k, cfg,
+                                               exclude_self=True, shards=S)
+            )
+            np.testing.assert_array_equal(np.asarray(si), np.asarray(ref_i))
+            np.testing.assert_array_equal(np.asarray(sd), np.asarray(ref_d))
+            t_sim = _time(
+                lambda S=S: knn_tables_library_sharded_sim(
+                    V, V, k, cfg, exclude_self=True, shards=S
+                ),
+                reps=reps,
+            )
+            sharded[f"sim{S}"] = {"build_merge_s": t_sim,
+                                  "identical": True, "collective": False}
+
+        # Merge-only, device tree vs host lexsort (+ the host round-trip
+        # the SS14 bugfix removed): per-shard tables built once, reduced
+        # both ways.
+        S = shard_counts[-1]
+        shard = -(-Lp // S)
+        parts = [
+            jax.block_until_ready(knn.knn_tables_all_E_streaming(
+                V, V[:, s * shard : min((s + 1) * shard, Lp)],
+                min(k, shard, Lp - s * shard), exclude_self=True,
+                tile_c=tile_c, col_offset=s * shard,
+                col_hi=min((s + 1) * shard, Lp),
+            ))
+            for s in range(S)
+        ]
+        idx_p = [p[0] for p in parts]
+        d_p = [p[1] for p in parts]
+        t_merge_dev = _time(lambda: knn.merge_topk_tree(idx_p, d_p, k),
+                            reps=max(reps, 3))
+        t0 = time.perf_counter()
+        knn.merge_shard_tables([np.asarray(i) for i in idx_p],
+                               [np.asarray(d) for d in d_p], k=k)
+        t_merge_host = time.perf_counter() - t0
+
+        cell = {
+            "N": N, "L": L, "Lp": Lp, "E_max": cfg.E_max, "k": k,
+            "NL": N * L, "ceiling_ratio": N * L / PRIOR_CEILING_NL,
+            "tile_c": tile_c,
+            "streaming_bytes": knn.streaming_bytes(
+                Lp, k, tile_c, cfg.E_max),
+            "knn_build_s": t_build,
+            "sharded": sharded,
+            "merge_device_s": t_merge_dev,
+            "merge_host_s": t_merge_host,
+            # Whole-brain extrapolations (per-series costs x N; the flat
+            # worker grid divides them by the device count).
+            "phase1_tables_extrapolated_s": t_build * N,
+            "phase1_tables_per_512_workers_s": t_build * N / 512,
+        }
+        out["cells"][f"{N}x{L}"] = cell
+        row(f"scale_{N}x{L}_knn_build", t_build,
+            f"Lp={Lp};tile={tile_c};NL={N * L}"
+            f";ceiling_x={cell['ceiling_ratio']:.0f}")
+        for sk, sv in sharded.items():
+            row(f"scale_{N}x{L}_sharded_{sk}", sv["build_merge_s"],
+                "identical=True")
+        row(f"scale_{N}x{L}_merge", t_merge_dev,
+            f"host={t_merge_host * 1e6:.0f}us;"
+            f"device_vs_host={t_merge_host / max(t_merge_dev, 1e-9):.1f}x")
+
+    # Paper-shape model: per-series build scales as E_max * Lp^2 (the
+    # streaming distance sweep); calibrate the constant on the largest
+    # measured cell and project the paper's two headline datasets.
+    big = out["cells"][f"{cells[-1][0]}x{cells[-1][1]}"]
+    c0 = big["knn_build_s"] / (big["E_max"] * big["Lp"] ** 2)
+    for name, (Np, Lraw) in {"fish1_normo": (53053, 1450),
+                             "subject11": (101729, 8528)}.items():
+        Lpp = Lraw - (20 - 1) - 1
+        t_series = c0 * 20 * Lpp ** 2
+        out[f"model_{name}"] = {
+            "N": Np, "L": Lraw,
+            "phase1_tables_s_1core": t_series * Np,
+            "phase1_tables_s_512_workers": t_series * Np / 512,
+        }
+        row(f"scale_model_{name}", t_series * Np / 512,
+            "per_512_workers_extrapolated")
+    _write_bench("BENCH_scale.json", out)
+
+
 BENCHES = {
     "table2": table2_speedup,
     "fig6": fig6_scaling_N,
@@ -758,6 +926,7 @@ BENCHES = {
     "knn": knn_selection_bench,
     "significance": significance_bench,
     "roofline": roofline_summary,
+    "scale": scale_bench,
 }
 
 

@@ -1,4 +1,6 @@
-"""cppEDM-style naive CCM (paper Alg. 1) — the baseline mpEDM improves on.
+"""cppEDM-style naive CCM (paper Alg. 1) — the baseline mpEDM improves
+on, and the comparison point of the cumulative-E recurrence
+(DESIGN.md SS2).
 
 Per (library i, target j) pair the kNN table is rebuilt from scratch at
 E = optE[j]: O(N^2 L^2 E).  Kept (a) to validate that the improved

@@ -1,5 +1,6 @@
 """EDM extensions — the paper's stated future work (SSV: "EDM algorithms
-other than simplex projection and CCM will be implemented in mpEDM").
+other than simplex projection and CCM will be implemented in mpEDM");
+they ride on the phase-1/2 machinery of DESIGN.md SS2.
 
   * S-Map (Sugihara 1994): locally-weighted linear forecasting; the theta
     sweep separates linear (theta=0) from state-dependent nonlinear

@@ -39,7 +39,11 @@ import numpy as np
 from repro.core import embedding
 from repro.core.stats import simplex_weights
 
-INF = jnp.float32(jnp.inf)
+# A numpy (not jnp) scalar: a module-scope device array would initialize
+# the jax backend at import time, before runtime/platform.py can latch
+# platform / XLA flags (DESIGN.md SS14).  jnp.where promotes it exactly
+# like the old jnp.float32 constant.
+INF = np.float32(np.inf)
 
 # Ceiling of the per-program streaming working set the tile calibration
 # aims for: the 16 MB TPU VMEM size.  Wide tiles are the lever that
@@ -203,7 +207,8 @@ def merge_topk_sorted(run_i, run_d, new_i, new_d, k: int):
     K = _next_pow2(k)
 
     def _pad(i, d, rank0):
-        pad = K - d.shape[-1]
+        w = d.shape[-1]
+        pad = K - w
         if pad:
             shp = d.shape[:-1] + (pad,)
             d = jnp.concatenate(
@@ -212,7 +217,18 @@ def merge_topk_sorted(run_i, run_d, new_i, new_d, k: int):
             i = jnp.concatenate(
                 [i, jnp.full(shp, 2147483647, jnp.int32)], axis=-1
             )
-        r = rank0 + jax.lax.broadcasted_iota(jnp.int32, d.shape, d.ndim - 1)
+        pos = jax.lax.broadcasted_iota(jnp.int32, d.shape, d.ndim - 1)
+        r = rank0 + pos
+        if pad:
+            # Padding sentinels rank after EVERY real entry of BOTH lists
+            # (2K offset), not just after their own list: a real entry can
+            # legitimately carry dist=+inf (masked self / shard-padding
+            # column, k == Lc), and the (dist, rank) key must still order
+            # it before synthetic padding — the shard-merge tree (SS14)
+            # feeds such lists; interior sentinels ranking between the two
+            # lists would beat the new list's genuine +inf entries and
+            # break the lax.top_k (distance, id) tie contract.
+            r = jnp.where(pos >= w, r + 2 * K, r)
         return i, d, r
 
     ai, ad, ar = _pad(run_i, run_d, 0)
@@ -784,12 +800,103 @@ def knn_tables_prefix_rebuild(
     )
 
 
+def merge_topk_tree(idx_parts, dist_parts, k: int):
+    """Device-side tree reduction of per-candidate-shard top-k tables to
+    the global top-k (DESIGN.md SS14) — the jnp replacement for the host
+    :func:`merge_shard_tables` oracle.
+
+    idx_parts / dist_parts: sequences of (..., Lq, k_s) shard tables in
+    ASCENDING ``col_offset`` order, indices GLOBAL candidate ids.  Folds
+    contiguous pairs through :func:`merge_topk_sorted` (the PR-6 bitonic
+    partial merge network), so the whole reduction is O(log S) merge
+    levels of fixed comparator networks — no sorts, no host round-trip.
+
+    Tie rule (proof sketch, expanded in DESIGN.md SS14): the network
+    resolves distance ties running-before-new; pairs are always
+    contiguous ascending shard blocks, and every id in a left block is
+    strictly smaller than every id in a right block, so
+    running-before-new IS the (distance, id) lexicographic key of
+    lax.top_k / :func:`merge_shard_tables` — bit-for-bit, ties included.
+    Each level merges to width ``min(k, w_a + w_b)`` rather than k so no
+    +inf/id-2^31-1 padding sentinel is ever introduced: a sentinel
+    carries an arrival rank, not a global id, and could otherwise
+    outrank a later shard's genuine masked entry in the k == Lc
+    exclude-self edge case.
+    """
+    parts = list(zip(list(idx_parts), list(dist_parts)))
+    if not parts:
+        raise ValueError("merge_topk_tree needs at least one shard table")
+    while len(parts) > 1:
+        nxt = []
+        for a in range(0, len(parts) - 1, 2):
+            (ia, da), (ib, db) = parts[a], parts[a + 1]
+            kk = min(k, ia.shape[-1] + ib.shape[-1])
+            nxt.append(merge_topk_sorted(ia, da, ib, db, kk))
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    idx, dist = parts[0]
+    return idx[..., :k], dist[..., :k]
+
+
+def merge_topk_collective(idx, dist, k: int, axis_name: str):
+    """Collective shard-table merge INSIDE a shard_map (DESIGN.md SS14).
+
+    idx / dist: this device's (..., Lq, k_s) candidate-shard top-k table
+    (global ids via ``col_offset``), where device i along ``axis_name``
+    holds the i-th contiguous candidate shard.  Returns the GLOBAL
+    (..., Lq, k) top-k, replicated on every device — the paper-scale
+    all-reduce that keeps the reduction on the interconnect instead of
+    funnelling every shard through the host.
+
+    Power-of-two axis: a ppermute butterfly — round r exchanges tables
+    with partner ``i XOR 2^r``, each device keeps the merged top-k of
+    its aligned 2^(r+1)-shard block, log2(W) rounds total, per-round
+    traffic one table.  The XOR partner of an aligned block is always
+    the adjacent block of the same size, so run/new assignment by block
+    side preserves the ascending-contiguous invariant that makes
+    running-before-new equal the (distance, id) tie rule (see
+    :func:`merge_topk_tree`).  Other axis sizes: one all_gather + the
+    same contiguous tree fold on every device.
+    """
+    W = jax.lax.psum(1, axis_name)
+    if W == 1:
+        return idx[..., :k], dist[..., :k]
+    if W & (W - 1) == 0:
+        me = jax.lax.axis_index(axis_name)
+        step = 1
+        while step < W:
+            perm = [(i, i ^ step) for i in range(W)]
+            oi = jax.lax.ppermute(idx, axis_name, perm)
+            od = jax.lax.ppermute(dist, axis_name, perm)
+            left = (me & step) == 0
+            kk = min(k, idx.shape[-1] + oi.shape[-1])
+            idx, dist = merge_topk_sorted(
+                jnp.where(left, idx, oi),
+                jnp.where(left, dist, od),
+                jnp.where(left, oi, idx),
+                jnp.where(left, od, dist),
+                kk,
+            )
+            step *= 2
+        return idx[..., :k], dist[..., :k]
+    gi = jax.lax.all_gather(idx, axis_name)
+    gd = jax.lax.all_gather(dist, axis_name)
+    return merge_topk_tree(list(gi), list(gd), k)
+
+
 def merge_shard_tables(
     idx_parts, dist_parts, k: int | None = None
 ) -> tuple[np.ndarray, np.ndarray]:
     """Host-side reduction of per-candidate-shard top-k tables to the
-    global top-k — the building block for paper-style multi-node libraries
-    (DESIGN.md SS8).
+    global top-k (DESIGN.md SS8/SS14).
+
+    .. deprecated:: PR 10
+        The pipeline now merges on-device (:func:`merge_topk_tree` /
+        :func:`merge_topk_collective`); this np.lexsort path is kept as
+        the ORACLE the device collective is bit-checked against (and for
+        host-only tooling/tests).  New code should not call it on the
+        hot path.
 
     idx_parts / dist_parts: sequences of (..., Lq, k_s) tables whose
     indices are GLOBAL candidate ids (each shard selected over its own

@@ -196,7 +196,7 @@ def make_ccm_tile_fn_bucketed(mesh, cfg: EDMConfig):
     return for_plan
 
 
-# ----------------------------------------- library-sharded kNN (DESIGN SS8)
+# ---------------------------------- library-sharded kNN (DESIGN SS8, SS14)
 def make_knn_shard_fn(mesh, cfg: EDMConfig, k: int, exclude_self: bool,
                       tile_c: int):
     """(Vq repl, Vc cols sharded, [lo, hi) bounds sharded) -> per-shard
@@ -206,8 +206,10 @@ def make_knn_shard_fn(mesh, cfg: EDMConfig, k: int, exclude_self: bool,
     with global column ids (``col_offset``/``col_hi``), so per-device
     memory is O(E_max x Lc/W + Lq x (k + tile)) and no device ever sees
     the full candidate axis — the paper-style multi-node library building
-    block.  Zero collectives; the reduction is the host-side
-    :func:`repro.core.knn.merge_shard_tables`.
+    block.  Zero collectives — this is the PER-SHARD half used by tests
+    and the host-merge oracle; the production path is
+    :func:`make_knn_shard_merge_fn`, which adds the on-device collective
+    reduction (DESIGN.md SS14).
     """
     axes = _flat(mesh)
 
@@ -231,17 +233,58 @@ def make_knn_shard_fn(mesh, cfg: EDMConfig, k: int, exclude_self: bool,
     )
 
 
+def make_knn_shard_merge_fn(mesh, cfg: EDMConfig, k: int, k_s: int,
+                            exclude_self: bool, tile_c: int):
+    """(Vq repl, Vc cols sharded, [lo, hi) bounds sharded) -> GLOBAL
+    (E_max, Lq, k) top-k tables, replicated — per-shard streaming build
+    followed by :func:`repro.core.knn.merge_topk_collective` (DESIGN.md
+    SS14), all inside one shard_map so the reduction runs on the device
+    interconnect (ppermute butterfly / all_gather tree) and the tables
+    never round-trip through the host.
+    """
+    axes = _flat(mesh)
+
+    def local(Vq, Vc_shard, bounds):
+        idx, d = knn.knn_tables_all_E_streaming(
+            Vq, Vc_shard, k_s, exclude_self=exclude_self, tile_c=tile_c,
+            dist_dtype=jnp.dtype(cfg.dist_dtype),
+            col_offset=bounds[0, 0], col_hi=bounds[0, 1],
+        )
+        return knn.merge_topk_collective(idx, d, k, axes[0])
+
+    rspec = P(None, None, None)
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(None, None), P(None, axes), P(axes, None)),
+            out_specs=(rspec, rspec),
+            check_rep=False,
+        )
+    )
+
+
+def _shard_bounds(Lc: int, W: int) -> tuple[int, np.ndarray]:
+    """Contiguous candidate-shard geometry: (slab width, (W, 2) [lo, hi))."""
+    shard = -(-Lc // W)
+    lo = np.arange(W, dtype=np.int32) * shard
+    return shard, np.stack([lo, np.minimum(lo + shard, Lc)], axis=1)
+
+
 def knn_tables_library_sharded(
     Vq, Vc, k: int, cfg: EDMConfig, *, exclude_self: bool, mesh=None
-) -> tuple[np.ndarray, np.ndarray]:
+) -> tuple[jax.Array, jax.Array]:
     """kNN tables with the CANDIDATE (library) axis sharded across devices.
 
     Each device selects top-k over its candidate shard (streaming
-    builders, global column ids); a host-side merge keyed on
-    (distance, id) — the lax.top_k tie rule — reduces the shard tables,
-    so the result is bit-identical to the single-device streaming table
-    whenever k <= Lc.  Returns host (idx, sq_dists), each
-    (E_max, Lq, k).
+    builders, global column ids), then the shard tables are reduced
+    ON-DEVICE by the collective bitonic merge (DESIGN.md SS14) whose
+    (distance, id) tie rule matches lax.top_k — the result is
+    bit-identical to the single-device streaming table whenever k <= Lc.
+    Returns DEVICE (idx, sq_dists), each (E_max, Lq, k), replicated
+    across the mesh: callers feeding downstream device code (CCM
+    lookups, weights) pay no host round-trip; host consumers can
+    np.asarray at their own boundary.
     """
     if mesh is None:
         mesh = default_mesh()
@@ -249,17 +292,46 @@ def knn_tables_library_sharded(
     Lc = Vc.shape[1]
     if k > Lc:
         raise ValueError(f"k={k} exceeds candidate count Lc={Lc}")
-    shard = -(-Lc // W)
+    shard, bounds = _shard_bounds(Lc, W)
     Vc_p = jnp.pad(jnp.asarray(Vc), ((0, 0), (0, shard * W - Lc)))
-    lo = np.arange(W, dtype=np.int32) * shard
-    bounds = np.stack([lo, np.minimum(lo + shard, Lc)], axis=1)
     tile_c = knn.resolve_stream_tile(shard, cfg, profile="host")
     # A shard narrower than k still contributes all its candidates; the
     # global top-k can draw at most min(k, shard) entries from one shard.
     k_s = min(k, shard)
-    fn = make_knn_shard_fn(mesh, cfg, k_s, exclude_self, tile_c)
-    idx_sh, d_sh = fn(jnp.asarray(Vq), Vc_p, jnp.asarray(bounds))
-    return knn.merge_shard_tables(np.asarray(idx_sh), np.asarray(d_sh), k=k)
+    fn = make_knn_shard_merge_fn(mesh, cfg, k, k_s, exclude_self, tile_c)
+    return fn(jnp.asarray(Vq), Vc_p, jnp.asarray(bounds))
+
+
+def knn_tables_library_sharded_sim(
+    Vq, Vc, k: int, cfg: EDMConfig, *, exclude_self: bool, shards: int
+) -> tuple[jax.Array, jax.Array]:
+    """SIMULATED library sharding on however few devices are present:
+    builds the ``shards`` per-shard streaming tables sequentially (same
+    ``col_offset`` geometry as the real mesh path) and reduces them with
+    the device-side tree merge (DESIGN.md SS14).  Exercises the exact
+    collective merge arithmetic — bit-identical to both the unsharded
+    table and the real multi-device path — so scaling benchmarks and CI
+    can sweep shard counts beyond the local device count.
+    """
+    Lc = Vc.shape[1]
+    if k > Lc:
+        raise ValueError(f"k={k} exceeds candidate count Lc={Lc}")
+    shard, bounds = _shard_bounds(Lc, shards)
+    Vc_p = jnp.pad(jnp.asarray(Vc), ((0, 0), (0, shard * shards - Lc)))
+    tile_c = knn.resolve_stream_tile(shard, cfg, profile="host")
+    k_s = min(k, shard)
+    idx_parts, d_parts = [], []
+    for s in range(shards):
+        lo, hi = int(bounds[s, 0]), int(bounds[s, 1])
+        idx, d = knn.knn_tables_all_E_streaming(
+            jnp.asarray(Vq), Vc_p[:, s * shard : (s + 1) * shard], k_s,
+            exclude_self=exclude_self, tile_c=tile_c,
+            dist_dtype=jnp.dtype(cfg.dist_dtype),
+            col_offset=lo, col_hi=hi,
+        )
+        idx_parts.append(idx)
+        d_parts.append(d)
+    return knn.merge_topk_tree(idx_parts, d_parts, k)
 
 
 def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:

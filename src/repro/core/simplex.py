@@ -1,5 +1,6 @@
 """Phase 1 — simplex projection: find the optimal embedding dimension per
-series (paper Alg. 1 lines 1-11).
+series (paper Alg. 1 lines 1-11; aligned indexing DESIGN.md SS2,
+exclusion semantics DESIGN.md SS4).
 
 Library = first half of the series, target = second half; for each
 E in 1..E_max forecast every target point from its E+1 nearest library

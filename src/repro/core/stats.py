@@ -1,4 +1,5 @@
-"""Small numerical helpers shared across the EDM core."""
+"""Small numerical helpers shared across the EDM core (simplex weight
+semantics under masked +inf distances: DESIGN.md SS4)."""
 from __future__ import annotations
 
 import jax

@@ -1,4 +1,5 @@
-"""Shared EDM configuration and result types."""
+"""Shared EDM configuration and result types (notation DESIGN.md SS1;
+every knob names the design section that owns it)."""
 from __future__ import annotations
 
 import dataclasses

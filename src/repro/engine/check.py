@@ -1,4 +1,5 @@
-"""Shared oracle-checking harness: every engine op vs the reference engine.
+"""Shared oracle-checking harness: every engine op vs the reference
+engine (the engine-layer contract of DESIGN.md SS5).
 
 Used by tests and by ``python -m repro.engine.check`` as a smoke check on
 new backends: random EDM-shaped inputs, max-abs deviation per op, hard

@@ -1,4 +1,5 @@
-"""Surrogate p-values, BH-FDR control, and causal-edge assembly.
+"""Surrogate p-values, BH-FDR control, and causal-edge assembly
+(DESIGN.md SS9).
 
 At whole-brain scale a raw-rho threshold drowns in multiple comparisons
 (N^2 - N simultaneous tests); large-scale network inference needs

@@ -1,4 +1,5 @@
-"""Configuration and result types of the causal-significance subsystem."""
+"""Configuration and result types of the causal-significance subsystem
+(DESIGN.md SS9)."""
 from __future__ import annotations
 
 import dataclasses

@@ -67,12 +67,21 @@ def init_fleet(
     sig: SignificanceConfig | None = None,
     unit_rows: int = 0,
     seed: int | None = None,
+    platform: str | None = None,
+    distributed: bool = False,
 ) -> dict:
     """Write the shared fleet spec every worker derives its queue from.
 
     unit_rows=0 resolves to one local-mesh chunk (devices x lib_block) —
     the natural claim granularity.  The spec pins dataset path, configs,
     and the unit grid so W workers agree on the queue with no exchange.
+
+    ``platform`` / ``distributed`` are the multi-host opt-in (DESIGN.md
+    SS14): workers apply the named runtime/platform.py tier before their
+    first jax touch, and with ``distributed`` they join the logical mesh
+    via their own EDM_COORDINATOR / EDM_NUM_PROCESSES / EDM_PROCESS_ID
+    environment (docs/OPERATIONS.md) — the spec opts the fleet in; the
+    per-process rank always comes from the worker's environment.
     """
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
@@ -102,6 +111,8 @@ def init_fleet(
         "sig": None if sig is None else dataclasses.asdict(sig),
         "dataset_crc32": fp["dataset_crc32"],
         "fingerprint": fp["fingerprint"],
+        "platform": platform,
+        "distributed": bool(distributed),
     }
     # JSON round-trip so the resume equality check compares like with
     # like (tuples become lists exactly as they will when read back).
@@ -148,6 +159,18 @@ def spawn_worker(
     e.setdefault("JAX_COMPILATION_CACHE_DIR",
                  str(pathlib.Path(out_dir).resolve() / "jax_cache"))
     e.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+    # A locally-spawned worker must NOT inherit the driver's multi-host
+    # rank: W children all claiming the driver's EDM_PROCESS_ID would
+    # deadlock jax.distributed.initialize.  Cross-host workers are
+    # launched externally (one per host, each with its own rank env —
+    # docs/OPERATIONS.md); the fleet.json `distributed` flag opts them in.
+    if env is None:
+        from repro.runtime import platform as _platform
+
+        for var in (_platform.ENV_COORDINATOR, _platform.ENV_NUM_PROCESSES,
+                    _platform.ENV_PROCESS_ID,
+                    _platform.ENV_LOCAL_DEVICE_IDS):
+            e.pop(var, None)
     src = pathlib.Path(__file__).resolve().parents[2]
     e["PYTHONPATH"] = f"{src}:{e['PYTHONPATH']}" if e.get("PYTHONPATH") else str(src)
     cmd = [sys.executable, "-m", "repro.launch.edm_fleet",
@@ -690,11 +713,38 @@ environment:
                       per finished run, same-run reruns replace theirs)
   EDM_FAULTS          fault-injection spec (runtime/faultpoints.py), e.g.
                       tile_pre_rename:crash@3 — testing only
+  EDM_COORDINATOR     multi-host mesh (DESIGN.md SS14; applied only when
+  EDM_NUM_PROCESSES   fleet.json opts in via its `distributed` flag):
+  EDM_PROCESS_ID      coordinator host:port of rank 0, world size, and
+                      THIS process's rank; each externally-launched
+                      worker exports its own rank before `work`
+                      (docs/OPERATIONS.md has the per-host recipe)
 """
 
 
-def main(argv=None) -> None:
+def apply_spec_platform(out_dir: str | pathlib.Path) -> None:
+    """Fleet workers' platform/mesh opt-in (DESIGN.md SS14): apply the
+    fleet.json `platform` tier and — when the spec says `distributed` —
+    join the multi-host mesh from this process's own EDM_* rank env.
+    MUST run before the worker's first jax backend touch (FleetWorker's
+    constructor builds the mesh), hence a free function on the raw spec
+    rather than a FleetWorker method."""
+    raw = json.loads((pathlib.Path(out_dir) / SPEC_NAME).read_text())
+    from repro.runtime import platform as rt_platform
+
+    tier = raw.get("platform")
+    if tier:
+        rt_platform.apply_platform(tier)
+    if raw.get("distributed"):
+        rt_platform.init_distributed()
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The edm_fleet CLI surface — exposed as a function so tests
+    (tests/test_docs.py) can parse README/runbook invocations against
+    the REAL parser."""
     ap = argparse.ArgumentParser(
+        prog="edm_fleet",
         description=__doc__.split("\n")[0],
         epilog=_FLAGS_EPILOG,
         formatter_class=argparse.RawDescriptionHelpFormatter,
@@ -748,6 +798,11 @@ def main(argv=None) -> None:
     ap.add_argument("--history",
                     help="trends: history JSONL to render (default "
                     "$EDM_HISTORY or <out>/history.jsonl)")
+    return ap
+
+
+def main(argv=None) -> None:
+    ap = build_parser()
     args = ap.parse_args(argv)
     if args.out is None and not (args.cmd == "trends" and args.history):
         ap.error(f"{args.cmd} requires --out")
@@ -807,6 +862,9 @@ def main(argv=None) -> None:
 
     if not args.worker_id:
         ap.error("work requires --worker-id")
+    # Platform tier + optional multi-host mesh join from the shared spec,
+    # BEFORE the first jax touch below (DESIGN.md SS14).
+    apply_spec_platform(args.out)
     telemetry.configure_from_env(
         default_path=telemetry.worker_jsonl(args.out, args.worker_id),
         worker=args.worker_id,

@@ -48,7 +48,7 @@ from repro.data import store
 from repro.data.synthetic import dummy_brain
 from repro.engine import available_engines
 from repro.inference import SignificanceConfig, run_significance
-from repro.runtime import autotune, history, telemetry
+from repro.runtime import autotune, history, platform, telemetry
 
 
 def _run_fleet(args, ts, cfg, sig):
@@ -86,7 +86,13 @@ def _run_fleet(args, ts, cfg, sig):
         else:
             store.save_dataset(dataset, ts, {"synthetic": args.synthetic})
     edm_fleet.init_fleet(
-        out, dataset, cfg, sig, unit_rows=args.unit_rows, seed=args.seed
+        out, dataset, cfg, sig, unit_rows=args.unit_rows, seed=args.seed,
+        # Fleet workers re-apply the driver's platform tier from
+        # fleet.json; `distributed` opts externally-launched workers into
+        # the multi-host mesh via their OWN rank env (DESIGN.md SS14) —
+        # locally-spawned children have the mesh vars stripped.
+        platform=args.platform,
+        distributed=platform.distributed_spec_from_env() is not None,
     )
     t0 = time.time()
 
@@ -182,6 +188,10 @@ flag groups:
   geometry       --lib-block --target-tile --knn-tile --stream-depth
                  (all byte-invisible to outputs; see --autotune)
   engine         --engine {reference,pallas-*}
+  platform       --platform {cpu,gpu,tpu} (runtime/platform.py tier:
+                 XLA flags + default engine; DESIGN.md SS14).  Multi-
+                 host mesh joins via env: EDM_COORDINATOR host:port,
+                 EDM_NUM_PROCESSES, EDM_PROCESS_ID (docs/OPERATIONS.md)
   significance   --lib-sizes --surrogates --fdr --surrogate-kind --seed
   fleet          --workers --unit-rows --unit-retries
                  --max-worker-restarts
@@ -206,8 +216,12 @@ flag groups:
 """
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
+    """The edm_run CLI surface — exposed as a function so tests
+    (tests/test_docs.py) can parse README/runbook invocations against
+    the REAL parser."""
     ap = argparse.ArgumentParser(
+        prog="edm_run",
         description=__doc__.split("\n")[0],
         epilog=_FLAGS_EPILOG,
         formatter_class=argparse.RawDescriptionHelpFormatter,
@@ -218,6 +232,14 @@ def main():
     ap.add_argument("--e-max", type=int, default=20)
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--lib-block", type=int, default=8)
+    ap.add_argument(
+        "--platform", default=None, choices=platform.available_tiers(),
+        help="execution tier (runtime/platform.py, DESIGN.md SS14): sets "
+        "the jax platform, the tier's tuned XLA flags, and — unless "
+        "--engine overrides — the tier's default engine.  Applied before "
+        "the first jax backend touch; multi-host meshes additionally join "
+        "via EDM_COORDINATOR/EDM_NUM_PROCESSES/EDM_PROCESS_ID",
+    )
     ap.add_argument(
         "--target-tile", type=int, default=0,
         help="phase-2 column tile width (0 = untiled); > 0 streams targets "
@@ -316,7 +338,23 @@ def main():
         "--autotune (default: --out itself, i.e. a rerun tunes from the "
         "previous run)",
     )
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
+
+    # Platform tier + multi-host mesh join, BEFORE any jax backend touch
+    # (XLA flags and jax_platform_name are latched at backend init).
+    if args.platform:
+        applied = platform.apply_platform(args.platform)
+        print(f"platform: tier {applied['tier']} "
+              f"(engine default {applied['engine']})")
+    dist = platform.init_distributed()
+    if dist is not None:
+        print(f"distributed: process {dist['process_id']}/"
+              f"{dist['num_processes']} via {dist['coordinator']}")
 
     if args.synthetic:
         N, L = map(int, args.synthetic.split("x"))
@@ -329,8 +367,14 @@ def main():
                      f"{args.engine}; drop the deprecated flag")
         print("note: --use-kernels is deprecated; use --engine pallas-compiled")
         engine = "pallas-compiled"
+    elif args.engine:
+        engine = args.engine
+    elif args.platform:
+        # The tier's default engine (registry tie-in): gpu/tpu tiers run
+        # the Pallas kernels, cpu stays on the jnp reference engine.
+        engine = platform.default_engine(args.platform)
     else:
-        engine = args.engine or "reference"
+        engine = "reference"
     cfg = EDMConfig(
         E_max=args.e_max, tau=args.tau, lib_block=args.lib_block,
         engine=engine, bucketed=not args.no_bucketed,

@@ -1,4 +1,6 @@
-"""Fault-tolerant execution: resilient step loop + straggler telemetry.
+"""Fault-tolerant execution: resilient step loop + straggler telemetry
+(retry/poison verdicts feed the fleet queue of DESIGN.md SS10; the
+telemetry spine is DESIGN.md SS11).
 
 The paper's failure mode was GPU-init stragglers on 512 MPI workers
 (median 4.6 s, max 22.9 s — SSIV-B2).  On TPU pods the analogues are

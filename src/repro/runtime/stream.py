@@ -1,4 +1,5 @@
-"""Async chunk queue: overlap device compute with host-side drains.
+"""Async chunk queue: overlap device compute with host-side drains —
+the double-buffered chunk streaming of DESIGN.md SS6.
 
 JAX dispatch is asynchronous — a jitted call returns device futures
 immediately and only blocks when the host materializes them (np.asarray).

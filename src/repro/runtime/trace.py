@@ -1,4 +1,5 @@
-"""Fleet trace assembly: the analysis layer above the telemetry spine.
+"""Fleet trace assembly: the analysis layer above the telemetry spine
+(DESIGN.md SS13).
 
 The spine (runtime/telemetry.py) records WHERE each worker's wall time
 went; this module stitches the per-worker JSONL files into ONE fleet

@@ -1,4 +1,5 @@
-"""Elastic file-lock lease work queue — the paper's master-worker, masterless.
+"""Elastic file-lock lease work queue — the paper's master-worker,
+masterless (DESIGN.md SS10).
 
 The paper schedules EDM work units from an MPI master onto 512 workers
 (SSIII-C).  Our substrate is better than a master: the TileWriter store

@@ -1,0 +1,156 @@
+"""Documentation front door (PR 10): the docs must not rot.
+
+Three invariants, all enforced against the REAL artifacts:
+
+* every public module in core/, runtime/, inference/, engine/ names its
+  DESIGN.md section in the module docstring, and the section exists;
+* every CLI invocation shown in README.md / docs/OPERATIONS.md parses
+  against the real argparse parsers (launch.edm_run.build_parser /
+  launch.edm_fleet.build_parser), and every bench name shown exists in
+  benchmarks/run.py's BENCHES registry;
+* every `SSn` design reference in README/ROADMAP/OPERATIONS/docstrings
+  resolves to an actual `## SSn` header in DESIGN.md.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import shlex
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DESIGN = (REPO / "DESIGN.md").read_text()
+DESIGN_SECTIONS = {int(m) for m in re.findall(r"^## SS(\d+)", DESIGN, re.M)}
+
+PUBLIC_PACKAGES = ("core", "runtime", "inference", "engine")
+
+
+def _public_modules():
+    for pkg in PUBLIC_PACKAGES:
+        for p in sorted((REPO / "src" / "repro" / pkg).glob("*.py")):
+            yield p
+
+
+def test_design_sections_contiguous():
+    """Headers are `## SSn` for n = 1..max with no gaps — a renumbering
+    that orphans cross-references cannot land silently."""
+    assert DESIGN_SECTIONS == set(range(1, max(DESIGN_SECTIONS) + 1))
+    assert max(DESIGN_SECTIONS) >= 14
+
+
+@pytest.mark.parametrize("path", list(_public_modules()),
+                         ids=lambda p: f"{p.parent.name}/{p.name}")
+def test_module_docstring_names_design_section(path):
+    ds = ast.get_docstring(ast.parse(path.read_text()))
+    assert ds, f"{path} has no module docstring"
+    refs = re.findall(r"DESIGN\.md SS(\d+)", ds)
+    assert refs, f"{path} docstring names no DESIGN.md section"
+    for n in refs:
+        assert int(n) in DESIGN_SECTIONS, f"{path} cites missing SS{n}"
+
+
+# --------------------------------------------------------------- SS refs
+
+DOC_FILES = ("README.md", "ROADMAP.md", "DESIGN.md", "docs/OPERATIONS.md")
+
+
+@pytest.mark.parametrize("doc", DOC_FILES)
+def test_doc_ss_references_resolve(doc):
+    """Any `SSn` (digits — paper sections use roman numerals) in the
+    prose docs must be a real DESIGN.md header."""
+    text = (REPO / doc).read_text()
+    for n in re.findall(r"\bSS(\d+)\b", text):
+        assert int(n) in DESIGN_SECTIONS, f"{doc} cites missing SS{n}"
+
+
+def test_module_docstring_ss_references_resolve():
+    for path in _public_modules():
+        ds = ast.get_docstring(ast.parse(path.read_text())) or ""
+        for n in re.findall(r"\bSS(\d+)\b", ds):
+            assert int(n) in DESIGN_SECTIONS, f"{path} cites missing SS{n}"
+
+
+# ------------------------------------------------------------- CLI tours
+
+
+def _console_commands(text: str):
+    """Commands from ``` fenced blocks: join backslash continuations,
+    keep `$ `-prompted lines, split env-var prefixes off."""
+    for block in re.findall(r"```(?:console|bash|sh)?\n(.*?)```", text,
+                            re.S):
+        joined = block.replace("\\\n", " ")
+        for line in joined.splitlines():
+            line = line.strip()
+            if not line.startswith("$ "):
+                continue
+            toks = shlex.split(line[2:])
+            while toks and re.fullmatch(r"[A-Z_][A-Z0-9_]*=.*", toks[0]):
+                toks.pop(0)
+            if toks:
+                yield toks
+
+
+def _bench_names():
+    src = (REPO / "benchmarks" / "run.py").read_text()
+    block = re.search(r"^BENCHES = \{\n(.*?)^\}", src, re.S | re.M).group(1)
+    return set(re.findall(r'"([a-z0-9]+)":', block))
+
+
+def _doc_cli_invocations():
+    out = []
+    for doc in ("README.md", "docs/OPERATIONS.md"):
+        for toks in _console_commands((REPO / doc).read_text()):
+            out.append((doc, toks))
+    return out
+
+
+def test_readme_and_runbook_cli_lines_parse():
+    """Every edm_run / edm_fleet invocation in the docs parses against
+    the real parser; every bench name shown exists in BENCHES.  At least
+    one of each must be present — the tour cannot silently vanish."""
+    from repro.launch import edm_fleet, edm_run
+
+    parsers = {"repro.launch.edm_run": edm_run.build_parser(),
+               "repro.launch.edm_fleet": edm_fleet.build_parser()}
+    benches = _bench_names()
+    seen = {"repro.launch.edm_run": 0, "repro.launch.edm_fleet": 0,
+            "bench": 0}
+    for doc, toks in _doc_cli_invocations():
+        if toks[0] == "python" and toks[1:2] == ["-m"] and \
+                toks[2] in parsers:
+            try:
+                parsers[toks[2]].parse_args(toks[3:])
+            except SystemExit:
+                pytest.fail(f"{doc}: `{' '.join(toks)}` does not parse "
+                            f"against the real {toks[2]} parser")
+            seen[toks[2]] += 1
+        elif toks[0] == "python" and toks[1:2] == ["benchmarks/run.py"]:
+            names = [t for t in toks[2:] if not t.startswith("-")]
+            for name in names:
+                assert name in benches, \
+                    f"{doc}: bench `{name}` not in BENCHES ({sorted(benches)})"
+            seen["bench"] += 1
+    assert seen["repro.launch.edm_run"] >= 2, "README lost the edm_run tour"
+    assert seen["repro.launch.edm_fleet"] >= 4, \
+        "README lost the edm_fleet tour"
+    assert seen["bench"] >= 1, "docs lost the benchmark tour"
+
+
+def test_readme_architecture_map_paths_exist():
+    """The README architecture-map module paths must exist on disk."""
+    text = (REPO / "README.md").read_text()
+    table = re.search(r"\| layer \| modules \|.*?\n\n", text, re.S).group(0)
+    for mod in re.findall(r"`((?:core|engine|kernels|inference|runtime|"
+                          r"data|launch)/[a-z_./]+)`", table):
+        target = REPO / "src" / "repro" / mod
+        assert target.exists(), f"README architecture map: {mod} missing"
+
+
+def test_operations_runbook_exists_and_covers_recovery():
+    text = (REPO / "docs" / "OPERATIONS.md").read_text()
+    for needle in ("--watch", "--heal", "fingerprint", "poison",
+                   "EDM_COORDINATOR", "EDM_NUM_PROCESSES",
+                   "EDM_PROCESS_ID"):
+        assert needle in text, f"runbook lost its {needle} section"

@@ -416,21 +416,116 @@ def test_merge_shard_tables_bit_identical():
         np.testing.assert_array_equal(md, np.asarray(d0))
 
 
+def test_merge_topk_tree_bit_identical_vs_oracle():
+    """The DEVICE-side tree merge (DESIGN.md SS14) == the host lexsort
+    oracle == the unsharded table — idx AND f32 dists, ties included —
+    across shard counts (pow2 and not, shards narrower than k) and at
+    the k == Lc exclude-self edge where +inf masked entries reach the
+    final table."""
+    rng = np.random.default_rng(17)
+    V = rng.standard_normal((6, 120)).astype(np.float32)
+    # duplicate columns across future shard boundaries force exact
+    # cross-shard distance ties — the (distance, id) rule must decide
+    V[:, 50] = V[:, 10]
+    V[:, 90] = V[:, 10]
+    V[:, 91] = V[:, 33]
+    Vq = jnp.asarray(V)
+    for k in (7, 120):  # 120 == Lc: one masked +inf (self) entry survives
+        i0, d0 = knn.knn_tables_all_E_streaming(Vq, Vq, k, True, tile_c=32)
+        for S in (2, 3, 4, 5):
+            shard = -(-120 // S)
+            parts = [
+                knn.knn_tables_all_E_streaming(
+                    Vq, Vq[:, s * shard : min((s + 1) * shard, 120)],
+                    min(k, shard, 120 - s * shard), True, tile_c=16,
+                    col_offset=s * shard, col_hi=min((s + 1) * shard, 120),
+                )
+                for s in range(S)
+            ]
+            ti, td = knn.merge_topk_tree(
+                [p[0] for p in parts], [p[1] for p in parts], k
+            )
+            oi, od = knn.merge_shard_tables(
+                [p[0] for p in parts], [p[1] for p in parts], k=k
+            )
+            np.testing.assert_array_equal(np.asarray(ti), oi)
+            np.testing.assert_array_equal(np.asarray(td), od)
+            np.testing.assert_array_equal(np.asarray(ti), np.asarray(i0))
+            np.testing.assert_array_equal(np.asarray(td), np.asarray(d0))
+
+
+@pytest.mark.parametrize("engine_name", ["reference", "pallas-interpret"])
+def test_merge_tree_on_engine_tables(engine_name):
+    """Acceptance bit (DESIGN.md SS14): the device-side merge is
+    bit-identical to the merge_shard_tables oracle on per-shard tables
+    built by BOTH the jnp and the Pallas engines, for >= 2 shard
+    counts."""
+    from repro import engine
+
+    eng = engine.get_engine(engine_name)
+    rng = np.random.default_rng(29)
+    V = rng.standard_normal((4, 96)).astype(np.float32)
+    V[:, 64] = V[:, 3]  # cross-shard tie
+    Vq = jnp.asarray(V)
+    cfg = EDMConfig(E_max=4)
+    k = 6
+    u_i, u_d = eng.knn_tables(Vq, Vq, k, exclude_self=False, cfg=cfg)
+    for S in (2, 4):
+        shard = 96 // S
+        idx_p, d_p = [], []
+        for s in range(S):
+            li, ld = eng.knn_tables(
+                Vq, Vq[:, s * shard : (s + 1) * shard], min(k, shard),
+                exclude_self=False, cfg=cfg,
+            )
+            idx_p.append(li + s * shard)  # local -> global candidate ids
+            d_p.append(ld)
+        ti, td = knn.merge_topk_tree(idx_p, d_p, k)
+        oi, od = knn.merge_shard_tables(idx_p, d_p, k=k)
+        np.testing.assert_array_equal(np.asarray(ti), oi)
+        np.testing.assert_array_equal(np.asarray(td), od)
+        np.testing.assert_array_equal(np.asarray(ti), np.asarray(u_i))
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(u_d))
+
+
 def test_library_sharded_pipeline_builder():
-    """The shard_map-backed builder (local mesh) == dense-oracle table."""
+    """The shard_map-backed builder (local mesh) == dense-oracle table,
+    and — the SS14 bugfix — it returns DEVICE arrays (no host np
+    round-trip on the collective path)."""
+    import jax
+
     from repro.core.pipeline import knn_tables_library_sharded
 
     Vq = _rand_V(5, 110, 23)
     cfg = EDMConfig(E_max=5)
     mi, md = knn_tables_library_sharded(Vq, Vq, 6, cfg, exclude_self=True)
+    assert isinstance(mi, jax.Array) and isinstance(md, jax.Array)
     i0, d0 = knn.knn_tables_dense(Vq, Vq, 6, True, impl="unroll")
-    np.testing.assert_array_equal(mi, np.asarray(i0))
-    np.testing.assert_array_equal(md, np.asarray(d0))
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(md), np.asarray(d0))
+
+
+def test_library_sharded_sim_path():
+    """The simulated-shard path (sequential per-shard builds + the same
+    device tree merge; used by benchmarks/CI on few devices) matches the
+    unsharded table bit-for-bit across shard counts."""
+    from repro.core.pipeline import knn_tables_library_sharded_sim
+
+    Vq = _rand_V(5, 110, 23)
+    cfg = EDMConfig(E_max=5)
+    i0, d0 = knn.knn_tables_dense(Vq, Vq, 6, True, impl="unroll")
+    for S in (2, 3, 4):
+        si, sd = knn_tables_library_sharded_sim(
+            Vq, Vq, 6, cfg, exclude_self=True, shards=S
+        )
+        np.testing.assert_array_equal(np.asarray(si), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(sd), np.asarray(d0))
 
 
 def test_library_sharded_multi_device():
-    """4 fake devices: each selects over its candidate shard, the host
-    merge reproduces the unsharded table bit-for-bit (subprocess — the
+    """4 fake devices: each selects over its candidate shard and the
+    DEVICE-side collective (ppermute butterfly at W=4, all_gather fold
+    at W=3) reproduces the unsharded table bit-for-bit (subprocess — the
     in-process suite must see the real single CPU device)."""
     import os
     import subprocess
@@ -449,11 +544,19 @@ def test_library_sharded_multi_device():
         rng = np.random.default_rng(31)
         Vq = jnp.asarray(rng.standard_normal((5, 130)), jnp.float32)
         cfg = EDMConfig(E_max=5, knn_tile_c=16)  # force a narrow tile
-        mi, md = knn_tables_library_sharded(Vq, Vq, 6, cfg, exclude_self=True)
         i0, d0 = knn.knn_tables_dense(Vq, Vq, 6, True, impl="unroll")
-        np.testing.assert_array_equal(mi, np.asarray(i0))
-        np.testing.assert_array_equal(md, np.asarray(d0))
-        print("sharded-4dev == unsharded: OK")
+        # W=4: power-of-two ppermute butterfly; device arrays out
+        mi, md = knn_tables_library_sharded(Vq, Vq, 6, cfg, exclude_self=True)
+        assert isinstance(mi, jax.Array) and isinstance(md, jax.Array)
+        np.testing.assert_array_equal(np.asarray(mi), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(md), np.asarray(d0))
+        # W=3: non-power-of-two all_gather + tree fold
+        mesh3 = jax.make_mesh((3,), ("workers",), devices=jax.devices()[:3])
+        mi, md = knn_tables_library_sharded(
+            Vq, Vq, 6, cfg, exclude_self=True, mesh=mesh3)
+        np.testing.assert_array_equal(np.asarray(mi), np.asarray(i0))
+        np.testing.assert_array_equal(np.asarray(md), np.asarray(d0))
+        print("sharded-4dev collective == unsharded: OK")
     """)
     r = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
